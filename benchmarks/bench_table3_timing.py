@@ -1,0 +1,46 @@
+"""Table 3 / Fig. 6: wall time of the six CV algorithms per fold.
+
+On this container the absolute times are CPU seconds; the reproduction
+target is the RELATIVE ordering and the PIChol speedup over Chol
+(paper: ~3.8–4.3× at q=31, g=4)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import cv
+
+from .common import SIZES, emit, ridge_problem, timeit
+
+
+def run():
+    out = {}
+    # the O(d³) factorization term must dominate for the paper's comparison
+    # to be meaningful — use the larger sizes regardless of CI scale
+    sizes = sorted(set(SIZES + [1024]))[-2:]
+    for h in sizes:
+        x, y = ridge_problem(h)
+        folds = cv.make_folds(x, y, 5)
+        lams = jnp.logspace(-3, 2, 31)
+
+        algos = {
+            "chol": lambda: cv.cv_exact_cholesky(folds, lams),
+            "pichol": lambda: cv.cv_picholesky(folds, lams, g=4, block=64),
+            "mchol": lambda: cv.cv_multilevel_cholesky(folds, c=0.0, s=1.5,
+                                                       s0=0.1),
+            "svd": lambda: cv.cv_svd(folds, lams, mode="full"),
+            "tsvd": lambda: cv.cv_svd(folds, lams, mode="truncated",
+                                      k_trunc=h // 4),
+            "rsvd": lambda: cv.cv_svd(folds, lams, mode="randomized",
+                                      k_trunc=h // 4,
+                                      key=jax.random.PRNGKey(0)),
+        }
+        times = {}
+        for name, fn in algos.items():
+            # warmup=1 excludes XLA compilation (the paper times the math,
+            # not the compiler); repeats=1 keeps the harness CI-sized
+            t = timeit(fn, repeats=1, warmup=1)
+            times[name] = t
+            emit(f"table3_{name}_h{h}", t, f"seconds={t:.3f}")
+        speedup = times["chol"] / times["pichol"]
+        emit(f"table3_speedup_h{h}", 0.0, f"pichol_vs_chol={speedup:.2f}x")
+        out[h] = times
+    return out

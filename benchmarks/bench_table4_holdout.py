@@ -1,0 +1,34 @@
+"""Table 4: minimum hold-out error and selected λ for the six algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cv
+
+from .common import emit, ridge_problem
+
+
+def run():
+    h = max(256, __import__("benchmarks.common", fromlist=["SIZES"]).SIZES[0])
+    x, y = ridge_problem(h)
+    folds = cv.make_folds(x, y, 5)
+    lams = jnp.logspace(-3, 2, 31)
+
+    results = {
+        "chol": cv.cv_exact_cholesky(folds, lams),
+        "pichol": cv.cv_picholesky(folds, lams, g=4, block=64),
+        "mchol": cv.cv_multilevel_cholesky(folds, c=0.0, s=1.5, s0=0.05),
+        "svd": cv.cv_svd(folds, lams, mode="full"),
+        "tsvd": cv.cv_svd(folds, lams, mode="truncated", k_trunc=h // 4),
+        "rsvd": cv.cv_svd(folds, lams, mode="randomized", k_trunc=h // 4,
+                          key=jax.random.PRNGKey(0)),
+    }
+    ref = results["chol"]
+    out = {}
+    for name, r in results.items():
+        dlog = abs(np.log10(r.best_lam) - np.log10(ref.best_lam))
+        emit(f"table4_{name}", 0.0,
+             f"min_err={r.best_error:.4f} lam={r.best_lam:.4g} "
+             f"dlog_lam_vs_chol={dlog:.2f} n_chol={r.n_exact_chol}")
+        out[name] = (r.best_error, r.best_lam, r.n_exact_chol)
+    return out

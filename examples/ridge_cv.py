@@ -1,0 +1,56 @@
+"""End-to-end reproduction of the paper's experiment pipeline (§6) on
+synthetic polynomial-kernel features: all six algorithms, hold-out curves,
+selected λ, and factorization counts.
+
+    PYTHONPATH=src python examples/ridge_cv.py [--h 512] [--n 1500]
+"""
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import cv  # noqa: E402
+from repro.data import make_regression_dataset  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--h", type=int, default=384)
+    ap.add_argument("--n", type=int, default=1200)
+    ap.add_argument("--folds", type=int, default=5)
+    args = ap.parse_args()
+
+    x, y = make_regression_dataset(jax.random.PRNGKey(0), args.n, args.h,
+                                   dtype=jnp.float64)
+    folds = cv.make_folds(x, y, args.folds)
+    lams = jnp.logspace(-3, 2, 31)
+
+    algos = {
+        "Chol": lambda: cv.cv_exact_cholesky(folds, lams),
+        "PIChol": lambda: cv.cv_picholesky(folds, lams, g=4),
+        "MChol": lambda: cv.cv_multilevel_cholesky(folds, c=0.0, s=1.5,
+                                                   s0=0.05),
+        "SVD": lambda: cv.cv_svd(folds, lams, mode="full"),
+        "t-SVD": lambda: cv.cv_svd(folds, lams, mode="truncated",
+                                   k_trunc=args.h // 4),
+        "r-SVD": lambda: cv.cv_svd(folds, lams, mode="randomized",
+                                   k_trunc=args.h // 4,
+                                   key=jax.random.PRNGKey(1)),
+    }
+    print(f"{'algo':8s} {'time(s)':>8s} {'min holdout':>12s} "
+          f"{'selected λ':>11s} {'#chol':>6s}")
+    for name, fn in algos.items():
+        t0 = time.perf_counter()
+        r = fn()
+        dt = time.perf_counter() - t0
+        print(f"{name:8s} {dt:8.2f} {r.best_error:12.4f} "
+              f"{r.best_lam:11.4g} {r.n_exact_chol:6d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end LM training driver: data pipeline -> model -> sharded AdamW ->
+fault-tolerant loop (checkpoint/auto-resume/straggler accounting).
+
+Default preset is CPU-sized; ``--preset 100m`` trains a ~100M-param model
+(a few hundred steps on real hardware; on this CPU container expect ~1 s+
+per step — the loop, checkpointing and resume logic are identical).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 50
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import token_stream
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train import TrainLoop, TrainLoopConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=configs.names())
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.preset == "tiny":
+        cfg = cfg.reduced()
+    else:  # ~100M: keep width, trim depth+vocab of the reference config
+        cfg = dataclasses.replace(
+            cfg, n_layers=min(cfg.n_layers, 12), vocab_size=32768,
+            dtype="float32", param_dtype="float32", remat=False)
+    print(f"arch={cfg.name} params≈{cfg.n_params()/1e6:.2f}M "
+          f"(preset={args.preset})")
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-4)
+    opt_state = opt[0](params)
+    if args.compress_grads:
+        residual = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        opt_state = (opt_state, residual)
+    step = jax.jit(make_train_step(model, opt,
+                                   compress_grads=args.compress_grads))
+
+    loop = TrainLoop(
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=25,
+                        ckpt_dir=args.ckpt_dir, log_every=5),
+        step, params, opt_state)
+    data = token_stream(jax.random.PRNGKey(1), cfg.vocab_size,
+                        args.batch, args.seq)
+    out = loop.run(itertools.islice(data, args.steps + 5))
+    for entry in out["log"]:
+        print(f"step {entry['step']:5d}  loss {entry['loss']:.4f}  "
+              f"{entry['sec_per_step']:.2f}s/step")
+    print(f"done at step {out['final_step']}; "
+          f"straggler steps: {out['straggler_steps']}")
+
+
+if __name__ == "__main__":
+    main()

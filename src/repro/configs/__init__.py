@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+ridge-CV workload config).  ``get(name)`` returns the full ModelConfig;
+``get(name).reduced()`` the CPU smoke variant.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+from . import (falcon_mamba_7b, h2o_danube_3_4b, kimi_k2_1t_a32b,
+               llama_3_2_vision_11b, minicpm_2b, mixtral_8x7b, picholesky,
+               qwen2_1_5b, recurrentgemma_2b, smollm_360m, whisper_base)
+
+_MODULES = [
+    qwen2_1_5b, smollm_360m, minicpm_2b, h2o_danube_3_4b, falcon_mamba_7b,
+    whisper_base, llama_3_2_vision_11b, recurrentgemma_2b, mixtral_8x7b,
+    kimi_k2_1t_a32b,
+]
+
+REGISTRY: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get(name: str) -> ModelConfig:
+    return REGISTRY[name]
+
+
+def names() -> List[str]:
+    return list(REGISTRY)
+
+
+# shape grid assigned to the LM pool (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def cells():
+    """All 40 (arch × shape) cells with runnable/skip annotation."""
+    out = []
+    for name, cfg in REGISTRY.items():
+        for shape, meta in SHAPES.items():
+            skip = None
+            if shape == "long_500k" and not cfg.subquadratic:
+                skip = "pure full-attention arch: 500k decode cache is " \
+                       "O(seq) with quadratic prefill — per DESIGN.md §5"
+            out.append((name, shape, meta, skip))
+    return out

@@ -1,0 +1,17 @@
+"""Whisper-base — encoder-decoder; conv/mel frontend is a STUB: input_specs
+provides precomputed frame embeddings [arXiv:2212.04356; unverified]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,
+    n_enc_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",
+    enc_seq_ratio=2,
+)

@@ -1,0 +1,14 @@
+"""repro.core — piCholesky: polynomial interpolation of Cholesky factors.
+
+Public API:
+  packing      tile-major triangular pack/unpack (TPU-aligned §5 layout)
+  picholesky   Algorithm 1 fit/eval
+  solvers      ridge solvers (Chol / SVD / t-SVD / r-SVD)
+  cv           k-fold CV drivers (Chol, PIChol, MChol, SVD family, PINRMSE)
+  bound        Theorem 4.4/4.7 error-bound terms
+  ridge_cv     RidgeCV — the end-to-end, mesh-aware entry point
+"""
+from . import bound, cv, packing, picholesky, ridge_cv, solvers  # noqa: F401
+from .cv import CVResult, FoldData, make_folds  # noqa: F401
+from .picholesky import PiCholesky, fit as fit_picholesky  # noqa: F401
+from .ridge_cv import RidgeCV  # noqa: F401

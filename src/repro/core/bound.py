@@ -1,0 +1,120 @@
+"""Theorem 4.4 / 4.7 error-bound machinery (small-d, exact).
+
+Computes the Taylor expansion of the Cholesky map C(A + λI), the remainder
+magnitude R_[a,b], and the piCholesky uniform bound — used by tests to check
+the bound actually dominates the observed error on random SPD matrices.
+
+All operators act on vec(·) of full d×d matrices; M = [[C(A)]] is the
+derivative of S: L ↦ LLᵀ restricted appropriately: vec(ΓLᵀ + LΓᵀ) =
+(L⊗I)vec(Γ) + (I⊗L)vec(Γᵀ).  Following the paper we use the symmetrized
+operator M = L⊗I + I⊗L acting on vec of the symmetric perturbation; its
+pseudo-application to v_I reproduces DC(I) because I is symmetric.
+Only intended for d ≲ 48 (M is d²×d²).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["m_operator", "taylor_factor", "remainder_r", "picholesky_bound"]
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _transpose_perm(d: int):
+    import numpy as np
+    t = np.zeros((d * d, d * d))
+    for i in range(d):
+        for j in range(d):
+            t[i * d + j, j * d + i] = 1.0
+    return t
+
+
+def _kron_op(x: jax.Array) -> jax.Array:
+    """Bracket operator: M vec_r(Γ) = vec_r(Γ Xᵀ + X Γᵀ) for ANY Γ.
+
+    (Row-major vec: vec_r(ΓXᵀ) = (I⊗X)vec_r(Γ); vec_r(XΓᵀ) =
+    (X⊗I)·T·vec_r(Γ) with T the transpose permutation.  The paper drops T by
+    treating v_{Γᵀ} = v_Γ, which only holds for symmetric Γ — the Cholesky
+    perturbation Γ is lower-triangular, so T is required for the Taylor
+    factor to actually converge at third order.)
+    """
+    d = x.shape[0]
+    eye = jnp.eye(d, dtype=x.dtype)
+    t = jnp.asarray(_transpose_perm(d), x.dtype)
+    return jnp.kron(eye, x) + jnp.kron(x, eye) @ t
+
+
+def m_operator(a: jax.Array, s: jax.Array) -> jax.Array:
+    """M_s = [[C(A + sI)]] (d²×d²), transpose-corrected."""
+    d = a.shape[0]
+    l = jnp.linalg.cholesky(a + s * jnp.eye(d, dtype=a.dtype))
+    return _kron_op(l)
+
+
+def _solve_lower_structured(m: jax.Array, v: jax.Array, d: int) -> jax.Array:
+    """Solve M x = v for x = vec(Γ), Γ lower-triangular (DS_L is invertible
+    only on the lower-triangular subspace — Thm 4.1). We restrict M's columns
+    to the tril support and least-squares solve."""
+    mask = jnp.tril(jnp.ones((d, d), bool)).reshape(-1)
+    cols = jnp.where(mask)[0]
+    m_sub = m[:, cols]
+    x_sub, *_ = jnp.linalg.lstsq(m_sub, v)
+    x = jnp.zeros(d * d, m.dtype).at[cols].set(x_sub)
+    return x
+
+
+def taylor_factor(a: jax.Array, lam: jax.Array, lam_c: jax.Array) -> jax.Array:
+    """p_TS(λ; λ_c): second-order Taylor approximation of C(A+λI) (Thm 4.4)."""
+    d = a.shape[0]
+    eye = jnp.eye(d, dtype=a.dtype)
+    l_c = jnp.linalg.cholesky(a + lam_c * eye)
+    m = _kron_op(l_c)
+    v_i = eye.reshape(-1)
+    d1 = _solve_lower_structured(m, v_i, d)                       # M⁻¹ v_I
+    e = _kron_op(d1.reshape(d, d))                                # E_c
+    d2 = _solve_lower_structured(m, e @ d1, d)                    # M⁻¹ E M⁻¹ v_I
+    dl = (lam - lam_c) * d1 - 0.5 * (lam - lam_c) ** 2 * d2
+    return l_c + dl.reshape(d, d)
+
+
+def remainder_r(a: jax.Array, lo: float, hi: float, n_grid: int = 9) -> jax.Array:
+    """R_[lo,hi] (Thm 4.4): max over s of
+    ‖M⁻¹E‖₂²‖M⁻¹v_I‖₂ + ‖M⁻¹‖₂‖M⁻¹E‖₂‖M⁻¹v_I‖₂²."""
+    d = a.shape[0]
+    eye = jnp.eye(d, dtype=a.dtype)
+    v_i = eye.reshape(-1)
+
+    def term(s):
+        m = m_operator(a, s)
+        m_inv = jnp.linalg.pinv(m)
+        m_inv_vi = _solve_lower_structured(m, v_i, d)
+        e = _kron_op(m_inv_vi.reshape(d, d))
+        m_inv_e = m_inv @ e
+        n_mie = jnp.linalg.norm(m_inv_e, 2)
+        n_miv = jnp.linalg.norm(m_inv_vi)
+        n_mi = jnp.linalg.norm(m_inv, 2)
+        return n_mie**2 * n_miv + n_mi * n_mie * n_miv**2
+
+    grid = jnp.linspace(lo, hi, n_grid)
+    return jnp.max(jnp.stack([term(s) for s in grid]))
+
+
+def picholesky_bound(a: jax.Array, sample_lams: jax.Array, lam_c: float,
+                     gamma: float) -> jax.Array:
+    """RHS of Theorem 4.7 (uniform over [λ_c−γ, λ_c+γ])."""
+    from .picholesky import vandermonde
+
+    d = a.shape[0]
+    big_d = d * (d + 1) / 2.0
+    g = sample_lams.shape[0]
+    w = float(jnp.max(jnp.abs(sample_lams - lam_c)))
+    v = vandermonde(sample_lams, 2)
+    v_pinv_norm = jnp.linalg.norm(jnp.linalg.pinv(v), 2)
+    r = remainder_r(a, lam_c - gamma, lam_c + gamma)
+    return (gamma**3 + jnp.sqrt(g * 1.0) * w**3 * (1 + gamma**2) * (lam_c + 1)
+            * v_pinv_norm) * r / jnp.sqrt(big_d)

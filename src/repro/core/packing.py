@@ -1,0 +1,162 @@
+"""Tile-major triangular packing — the TPU adaptation of piCholesky §5.
+
+The paper's recursive vectorization exists to make the L ↔ vector conversion
+memory-aligned (cache lines on CPU).  On TPU the natural unit of alignment is
+the (8,128) VREG tile / 128-lane HBM burst, so instead of the paper's
+divide-and-conquer recursion we pack the lower triangle of ``L`` as the
+sequence of its ``B×B`` tiles in *tile-column-major* order (the order a
+right-looking blocked Cholesky produces them).  Properties:
+
+* every copy is a full aligned ``B×B`` tile (no unaligned access — the
+  paper's requirement (i)),
+* only ``n_t(n_t+1)/2`` of ``n_t²`` tiles are stored, so the fit/interp GEMMs
+  do ~half the work of full-matrix vectorization (requirement (ii)); the
+  only redundancy is the zero upper half of the ``n_t`` diagonal tiles,
+  an overhead factor of ``1 + B/h`` — negligible for ``h ≫ B``.
+
+This module is the pure-jnp reference; ``repro.kernels.tri_pack`` is the
+Pallas kernel with the same layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "num_tiles",
+    "tile_index_pairs",
+    "packed_size",
+    "pack_tril",
+    "unpack_tril",
+    "pack_tril_rowwise",
+    "pack_tril_full",
+    "tril_mask_packed",
+]
+
+
+def num_tiles(h: int, block: int) -> int:
+    """Number of ``block``-sized tile rows covering an ``h×h`` matrix."""
+    return -(-h // block)
+
+
+@functools.lru_cache(maxsize=None)
+def tile_index_pairs(h: int, block: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(i, j) tile coordinates of the lower-triangular tiles, column-major.
+
+    Column-major over tile columns matches the panel order of a
+    right-looking blocked Cholesky, so factorization can stream tiles
+    straight into the packed buffer.
+    """
+    nt = num_tiles(h, block)
+    ii, jj = [], []
+    for j in range(nt):
+        for i in range(j, nt):
+            ii.append(i)
+            jj.append(j)
+    return np.asarray(ii, dtype=np.int32), np.asarray(jj, dtype=np.int32)
+
+
+def packed_size(h: int, block: int) -> int:
+    nt = num_tiles(h, block)
+    return (nt * (nt + 1) // 2) * block * block
+
+
+def _padded(mat: jax.Array, block: int) -> jax.Array:
+    h = mat.shape[-1]
+    nt = num_tiles(h, block)
+    pad = nt * block - h
+    if pad:
+        mat = jnp.pad(mat, [(0, 0)] * (mat.ndim - 2) + [(0, pad), (0, pad)])
+    return mat
+
+
+def pack_tril(mat: jax.Array, block: int = 128) -> jax.Array:
+    """Pack the lower triangle of ``mat`` (…, h, h) into (…, P) tile-major.
+
+    Diagonal tiles are stored with their upper half zeroed (alignment
+    padding).  Works under vmap/jit; the tile gather is a static reshape +
+    take, no dynamic indexing.
+    """
+    h = mat.shape[-1]
+    nt = num_tiles(h, block)
+    m = _padded(jnp.tril(mat), block)
+    lead = m.shape[:-2]
+    # (…, nt, B, nt, B) -> (…, nt, nt, B, B) -> take lower tiles
+    t = m.reshape(*lead, nt, block, nt, block)
+    t = jnp.moveaxis(t, -2, -3)  # (…, nt, nt, B, B)
+    ii, jj = tile_index_pairs(h, block)
+    flat = t.reshape(*lead, nt * nt, block, block)
+    tiles = jnp.take(flat, jnp.asarray(ii) * nt + jnp.asarray(jj), axis=-3)
+    return tiles.reshape(*lead, -1)
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_gather_indices(h: int, block: int) -> np.ndarray:
+    """(nt²,) packed-tile index per dense tile; sentinel = n_blocks (zero)."""
+    nt = num_tiles(h, block)
+    ii, jj = tile_index_pairs(h, block)
+    n_blocks = len(ii)
+    pmap = np.full((nt, nt), n_blocks, np.int32)
+    for p, (i, j) in enumerate(zip(ii, jj)):
+        pmap[i, j] = p
+    return pmap.reshape(-1)
+
+
+def unpack_tril(vec: jax.Array, h: int, block: int = 128) -> jax.Array:
+    """Inverse of :func:`pack_tril`: (…, P) -> (…, h, h) lower-triangular.
+
+    Gather-based (one take per call): scatters are slow and vmap badly on
+    CPU/TPU; a gather with a zero-tile sentinel is a single fused DMA.
+    """
+    nt = num_tiles(h, block)
+    lead = vec.shape[:-1]
+    tiles = vec.reshape(*lead, -1, block, block)
+    zero = jnp.zeros((*lead, 1, block, block), vec.dtype)
+    tiles = jnp.concatenate([tiles, zero], axis=-3)
+    idx = jnp.asarray(_unpack_gather_indices(h, block))
+    flat = jnp.take(tiles, idx, axis=-3)           # (…, nt², B, B)
+    t = flat.reshape(*lead, nt, nt, block, block)
+    t = jnp.moveaxis(t, -3, -2)  # (…, nt, B, nt, B)
+    m = t.reshape(*lead, nt * block, nt * block)
+    return jnp.tril(m[..., :h, :h])
+
+
+@functools.lru_cache(maxsize=None)
+def _tril_flat_indices(h: int) -> np.ndarray:
+    r, c = np.tril_indices(h)
+    return (r * h + c).astype(np.int32)
+
+
+def pack_tril_rowwise(mat: jax.Array) -> jax.Array:
+    """Paper's row-wise baseline: concatenate tril entries row by row.
+
+    Exact size D = h(h+1)/2 but every row copy is unaligned — the strategy
+    Table 1 shows losing to the recursive scheme.
+    """
+    h = mat.shape[-1]
+    lead = mat.shape[:-2]
+    flat = mat.reshape(*lead, h * h)
+    return jnp.take(flat, jnp.asarray(_tril_flat_indices(h)), axis=-1)
+
+
+def unpack_tril_rowwise(vec: jax.Array, h: int) -> jax.Array:
+    lead = vec.shape[:-1]
+    flat = jnp.zeros((*lead, h * h), vec.dtype)
+    flat = flat.at[..., jnp.asarray(_tril_flat_indices(h))].set(vec)
+    return flat.reshape(*lead, h, h)
+
+
+def pack_tril_full(mat: jax.Array) -> jax.Array:
+    """Paper's full-matrix baseline: vec of the whole (zeroed-upper) matrix —
+    aligned but 2× the interpolation work."""
+    lead = mat.shape[:-2]
+    return jnp.tril(mat).reshape(*lead, -1)
+
+
+def tril_mask_packed(h: int, block: int = 128, dtype=jnp.float32) -> jax.Array:
+    """Mask of 'real' (non-padding) entries in the tile-packed layout."""
+    return pack_tril(jnp.ones((h, h), dtype), block)

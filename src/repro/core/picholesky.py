@@ -1,0 +1,119 @@
+"""piCholesky (Algorithm 1): polynomial interpolation of Cholesky factors.
+
+Given a Hessian ``H`` and a sparse set of shifts ``{λ_s}``, factorize
+``L^s = chol(H + λ_s I)`` exactly, fit an order-``r`` polynomial to every
+entry of ``L`` via one batched least-squares solve, and evaluate the fit at
+any dense λ grid for ``O(r d²)`` per value.
+
+Layout: the target matrix ``T`` (g × D) holds tile-packed factors
+(:mod:`repro.core.packing`), so the fit ``Θ = (VᵀV)⁻¹VᵀT`` and the
+evaluation ``τ(λ)ᵀΘ`` are dense GEMMs (BLAS-3 / MXU, per paper §5).
+
+Basis options (paper uses raw monomials; centered monomials are a
+numerically safer drop-in that leaves Algorithm 1 unchanged — see
+Thm 4.6's M-matrix change of basis):
+
+* ``basis='monomial'``   — V[s,k] = λ_s^k          (paper, Algorithm 1)
+* ``basis='centered'``   — V[s,k] = (λ_s − λ_c)^k  (λ_c = mean of samples)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+
+__all__ = ["PiCholesky", "fit", "evaluate", "vandermonde", "choose_sample_lambdas"]
+
+
+def vandermonde(lams: jax.Array, degree: int, center: float | jax.Array = 0.0) -> jax.Array:
+    """g × (degree+1) observation matrix V (leading columns of Vandermonde)."""
+    x = jnp.asarray(lams) - center
+    return jnp.power(x[:, None], jnp.arange(degree + 1)[None, :].astype(x.dtype))
+
+
+def choose_sample_lambdas(lo: float, hi: float, g: int, spacing: str = "log") -> jax.Array:
+    """Pick the g sparse sample shifts from [lo, hi] (paper: subset of the
+    exponentially spaced candidate grid)."""
+    if spacing == "log":
+        return jnp.logspace(jnp.log10(lo), jnp.log10(hi), g)
+    return jnp.linspace(lo, hi, g)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PiCholesky:
+    """Fitted interpolant. ``theta``: (r+1, P) coefficients over the packed
+    layout; evaluation returns either packed vectors or unpacked factors."""
+
+    theta: jax.Array
+    center: jax.Array
+    h: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def degree(self) -> int:
+        return self.theta.shape[0] - 1
+
+    def eval_packed(self, lam: jax.Array) -> jax.Array:
+        """Horner evaluation at scalar or vector λ -> (…, P) packed rows."""
+        lam = jnp.asarray(lam)
+        x = (lam - self.center).astype(self.theta.dtype)
+        scalar = x.ndim == 0
+        x = jnp.atleast_1d(x)
+
+        def horner(acc, coeffs):  # over degrees, highest first
+            return acc * x[:, None] + coeffs[None, :], None
+
+        acc = jnp.zeros((x.shape[0], self.theta.shape[1]), self.theta.dtype)
+        acc, _ = jax.lax.scan(horner, acc, self.theta[::-1])
+        return acc[0] if scalar else acc
+
+    def eval_factor(self, lam: jax.Array) -> jax.Array:
+        """Interpolated lower-triangular factor(s) L(λ): (…, h, h)."""
+        return packing.unpack_tril(self.eval_packed(lam), self.h, self.block)
+
+
+def fit(
+    hessian: jax.Array,
+    sample_lams: jax.Array,
+    degree: int = 2,
+    *,
+    block: int = 128,
+    basis: str = "monomial",
+    chol_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    factors: Optional[jax.Array] = None,
+) -> PiCholesky:
+    """Algorithm 1.  ``hessian``: (h, h) SPD; ``sample_lams``: (g,) with
+    g > degree.  ``chol_fn`` lets callers inject the Pallas blocked Cholesky;
+    ``factors`` (g, h, h) skips factorization if the caller already has L^s.
+    """
+    h = hessian.shape[-1]
+    g = sample_lams.shape[0]
+    if g <= degree:
+        raise ValueError(f"need g > r: got g={g}, r={degree}")
+    chol_fn = chol_fn or jnp.linalg.cholesky
+
+    if factors is None:
+        eye = jnp.eye(h, dtype=hessian.dtype)
+        factors = jax.vmap(lambda lam: chol_fn(hessian + lam * eye))(sample_lams)
+
+    # Step 2: tile-packed target matrix T (g × P) — aligned BLAS-3 layout.
+    targets = packing.pack_tril(factors, block)
+
+    center = jnp.mean(sample_lams) if basis == "centered" else jnp.zeros((), sample_lams.dtype)
+    v = vandermonde(sample_lams, degree, center).astype(targets.dtype)
+
+    # Steps 5–6: Θ = (VᵀV)⁻¹ VᵀT — normal equations exactly as in the paper.
+    h_lam = v.T @ v
+    g_lam = v.T @ targets
+    theta = jnp.linalg.solve(h_lam, g_lam)
+    return PiCholesky(theta=theta, center=center.astype(targets.dtype), h=h, block=block)
+
+
+def evaluate(model: PiCholesky, lams: jax.Array) -> jax.Array:
+    """Convenience: interpolated factors at a dense λ grid, (q, h, h)."""
+    return model.eval_factor(lams)

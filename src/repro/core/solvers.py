@@ -1,0 +1,110 @@
+"""Ridge / regularized least-squares solvers (§3.2, §6.2 baselines).
+
+All solvers consume the normal-equation data ``H = XᵀX`` (h×h) and
+``g = Xᵀy`` (h,) — or the design matrix ``X`` itself for the SVD family —
+and return θ(λ) for one or many λ.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "solve_from_factor",
+    "solve_cholesky",
+    "solve_cholesky_sweep",
+    "solve_svd",
+    "solve_truncated_svd",
+    "randomized_range_finder",
+    "solve_randomized_svd",
+]
+
+
+def _tri_solve(l: jax.Array, b: jax.Array, *, lower: bool, trans: bool) -> jax.Array:
+    b2 = b[:, None] if b.ndim == 1 else b
+    out = jax.lax.linalg.triangular_solve(
+        l, b2, left_side=True, lower=lower, transpose_a=trans
+    )
+    return out[:, 0] if b.ndim == 1 else out
+
+
+def solve_from_factor(l: jax.Array, g: jax.Array) -> jax.Array:
+    """Forward + back substitution: solve L Lᵀ θ = g (§3.2)."""
+    w = _tri_solve(l, g, lower=True, trans=False)
+    return _tri_solve(l, w, lower=True, trans=True)
+
+
+def solve_cholesky(hessian: jax.Array, g: jax.Array, lam: jax.Array,
+                   chol_fn=None) -> jax.Array:
+    """Exact Chol baseline for one λ."""
+    chol_fn = chol_fn or jnp.linalg.cholesky
+    h = hessian.shape[-1]
+    l = chol_fn(hessian + lam * jnp.eye(h, dtype=hessian.dtype))
+    return solve_from_factor(l, g)
+
+
+def solve_cholesky_sweep(hessian: jax.Array, g: jax.Array, lams: jax.Array,
+                         chol_fn=None) -> jax.Array:
+    """Exact Chol for every λ in the grid — the O(q d³) cost piCholesky
+    amortizes. (q, h)."""
+    return jax.vmap(lambda lam: solve_cholesky(hessian, g, lam, chol_fn))(lams)
+
+
+def solve_svd(x: jax.Array, y: jax.Array, lams: jax.Array) -> jax.Array:
+    """Full-SVD baseline (Eq. 11): factorize X once, reuse across all λ."""
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    uty = u.T @ y  # (k,)
+
+    def per_lam(lam):
+        d = s / (s * s + lam)
+        return vt.T @ (d * uty)
+
+    return jax.vmap(per_lam)(jnp.atleast_1d(lams))
+
+
+def solve_truncated_svd(x: jax.Array, y: jax.Array, lams: jax.Array,
+                        k: int) -> jax.Array:
+    """t-SVD baseline: keep only the top-k singular triplets."""
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    u, s, vt = u[:, :k], s[:k], vt[:k]
+    uty = u.T @ y
+
+    def per_lam(lam):
+        d = s / (s * s + lam)
+        return vt.T @ (d * uty)
+
+    return jax.vmap(per_lam)(jnp.atleast_1d(lams))
+
+
+def randomized_range_finder(x: jax.Array, k: int, key: jax.Array,
+                            oversample: int = 10, n_iter: int = 2) -> jax.Array:
+    """Halko–Martinsson–Tropp randomized range finder with power iteration."""
+    n, h = x.shape
+    p = min(h, k + oversample)
+    omega = jax.random.normal(key, (h, p), x.dtype)
+    y = x @ omega
+    q, _ = jnp.linalg.qr(y)
+    for _ in range(n_iter):
+        q, _ = jnp.linalg.qr(x.T @ q)
+        q, _ = jnp.linalg.qr(x @ q)
+    return q  # (n, p)
+
+
+def solve_randomized_svd(x: jax.Array, y: jax.Array, lams: jax.Array, k: int,
+                         key: Optional[jax.Array] = None) -> jax.Array:
+    """r-SVD baseline [13]: approximate top-k SVD via random projection."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    q = randomized_range_finder(x, k, key)
+    b = q.T @ x  # (p, h)
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    u, s, vt = u[:, :k], s[:k], vt[:k]
+    uty = u.T @ y
+
+    def per_lam(lam):
+        d = s / (s * s + lam)
+        return vt.T @ (d * uty)
+
+    return jax.vmap(per_lam)(jnp.atleast_1d(lams))

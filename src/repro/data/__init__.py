@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    make_classification,
+    random_polynomial_features,
+    make_regression_dataset,
+    token_stream,
+)

@@ -1,0 +1,2 @@
+from .context import MeshCtx  # noqa: F401
+from . import sharding  # noqa: F401

@@ -1,0 +1,69 @@
+"""Mesh context threaded through the model code.
+
+``MeshCtx`` carries the mesh handle plus the axis-name conventions:
+  dp_axes  — axes batch/tokens shard over (("pod","data") or ("data",))
+  tp_axis  — tensor/expert-parallel axis ("model")
+  fsdp     — whether weight matrices additionally shard over dp_axes[-1]
+
+``MeshCtx(None)`` (no mesh) runs everything single-device — used by the CPU
+smoke tests; model code must work identically in both modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshCtx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Optional[Mesh]
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = False
+
+    @classmethod
+    def from_mesh(cls, mesh: Optional[Mesh], fsdp: bool = False) -> "MeshCtx":
+        if mesh is None:
+            return cls(None, fsdp=fsdp)
+        names = mesh.axis_names
+        dp = tuple(n for n in names if n != "model")
+        return cls(mesh, dp_axes=dp, tp_axis="model", fsdp=fsdp)
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return self.dp_axes[-1] if (self.fsdp and self.mesh is not None) else None
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.tp_axis) if self.mesh is not None else 1
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        s = 1
+        for a in self.dp_axes:
+            s *= self.axis_size(a)
+        return s
+
+    def sharding(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint that is a no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))

@@ -1,0 +1,292 @@
+"""Loop-aware cost model over post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which silently
+drops ~n_layers× of the FLOPs for scan-stacked models (and every collective
+inside the loop).  This walker parses the HLO text, builds a per-computation
+symbol table, expands ``while`` bodies by their ``known_trip_count`` (nested
+loops multiply), and accumulates:
+
+  flops       — dot (exact: 2·result·contracted), conv (approx), fusions ≈ 1/elem
+  hbm bytes   — per instruction: result + operand bytes (XLA's own
+                "bytes accessed" convention), fusion internals excluded
+  wire bytes  — ring formulas per collective (see roofline.py), counted
+                inside loops with multiplicity
+
+Shapes in the compiled module are per-device, so all numbers are
+per-device.  This is the basis of EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[\w\[\],{}\d]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_ARGS_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        return max(len([x for x in first.split(",") if x.strip()]), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.wire.items():
+            self.wire[k] = self.wire.get(k, 0.0) + v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(self.wire.values())
+
+
+class _Instr:
+    __slots__ = ("name", "type_str", "op", "rest", "line")
+
+    def __init__(self, name, type_str, op, rest, line):
+        self.name, self.type_str, self.op = name, type_str, op
+        self.rest, self.line = rest, line
+
+
+def _split_computations(text: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].append(
+                _Instr(m.group(1), m.group(2), m.group(3), m.group(4), line))
+    return comps
+
+
+def _dot_flops(instr: _Instr, symbols: Dict[str, str]) -> float:
+    result_elems = _type_elems(instr.type_str)
+    m = _CONTRACT_RE.search(instr.line)
+    args = _ARGS_RE.findall(instr.rest.split(")", 1)[0])
+    contracted = 1
+    if m and args:
+        lhs_type = symbols.get(args[0])
+        if lhs_type:
+            shapes = _parse_shapes(lhs_type)
+            if shapes:
+                dims = shapes[0][1]
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(dims):
+                        contracted *= dims[idx]
+    return 2.0 * result_elems * contracted
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    symtabs: Dict[str, Dict[str, str]] = {
+        cname: {i.name: i.type_str for i in instrs}
+        for cname, instrs in comps.items()}
+    memo: Dict[str, HloCost] = {}
+
+    def _param_touch_bytes(cname: str) -> Dict[int, int]:
+        """Per-parameter actually-touched bytes inside a fused computation:
+        a parameter consumed ONLY through dynamic-slice/slice reads only the
+        slice, not the stacked array (lax.scan xs access pattern)."""
+        out: Dict[int, int] = {}
+        if cname not in comps:
+            return out
+        instrs = comps[cname]
+        pname_by_idx: Dict[str, int] = {}
+        for ins in instrs:
+            if ins.op == "parameter":
+                m = re.match(r"(\d+)", ins.rest)
+                if m:
+                    pname_by_idx[ins.name] = int(m.group(1))
+        for pname, idx in pname_by_idx.items():
+            uses = [i for i in instrs
+                    if pname in _ARGS_RE.findall(i.rest.split("), ", 1)[0])]
+            if uses and all(u.op in ("dynamic-slice", "slice") for u in uses):
+                out[idx] = sum(_type_bytes(u.type_str) for u in uses)
+        return out
+
+    def cost_of(cname: str, stack=()) -> HloCost:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack or cname not in comps:
+            return HloCost()
+        total = HloCost()
+        sym = symtabs[cname]
+        for ins in comps[cname]:
+            op = ins.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                continue
+            # ---- bytes (bodies count their own) ----
+            # Ops that touch only a slice-sized region must NOT be charged
+            # their full operands: a lax.scan body dynamic-slices its xs
+            # every trip, and charging the whole stacked array per trip
+            # inflates the memory term by O(trip_count) (§Perf iteration 0).
+            rb = _type_bytes(ins.type_str)
+            if op in ("while", "call", "conditional"):
+                pass
+            elif op == "dynamic-slice":
+                total.hbm_bytes += 2 * rb              # read + write the slice
+            elif op == "dynamic-update-slice":
+                args = _ARGS_RE.findall(ins.rest.split("), ", 1)[0])
+                upd = _type_bytes(sym.get(args[1], "")) if len(args) > 1 else rb
+                total.hbm_bytes += 2 * upd             # read + write the region
+            elif op in ("slice", "broadcast", "reshape", "copy", "convert",
+                        "transpose", "reverse", "pad"):
+                total.hbm_bytes += 2 * rb              # stream result-sized data
+            else:
+                touch = {}
+                if op == "fusion":
+                    sub = _CALLS_RE.search(ins.line)
+                    if sub:
+                        touch = _param_touch_bytes(sub.group(1))
+                ob = 0
+                for i, a in enumerate(
+                        _ARGS_RE.findall(ins.rest.split("), ", 1)[0])):
+                    t = sym.get(a)
+                    if t:
+                        ob += touch.get(i, _type_bytes(t))
+                total.hbm_bytes += rb + ob
+            # ---- flops ----
+            if op == "dot":
+                total.flops += _dot_flops(ins, sym)
+            elif op == "convolution":
+                # depthwise/small convs only in this codebase: approximate
+                total.flops += 2.0 * _type_elems(ins.type_str) * 8
+            elif op in ("fusion", "add", "multiply", "subtract", "divide",
+                        "exponential", "tanh", "rsqrt", "sqrt", "maximum",
+                        "minimum", "compare", "select", "reduce", "log"):
+                total.flops += _type_elems(ins.type_str)
+            # ---- control flow ----
+            if op == "while":
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                trip_m = _TRIP_RE.search(ins.line)
+                trips = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    total.unknown_trip_loops += 1
+                if body:
+                    total.add(cost_of(body.group(1), stack + (cname,)), trips)
+                if cond:
+                    total.add(cost_of(cond.group(1), stack + (cname,)), trips)
+            elif op in ("call", "custom-call", "conditional"):
+                for sub in _CALLS_RE.findall(ins.line):
+                    total.add(cost_of(sub, stack + (cname,)))
+            elif op == "fusion":
+                pass  # internals stay in registers/VMEM: bytes already counted
+            # ---- collectives (sync or -start; skip -done) ----
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                size = _type_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    # result of *-start is a tuple (operand, result[, …]):
+                    # take the last array shape as the produced result
+                    shapes = _parse_shapes(ins.type_str)
+                    if len(shapes) >= 2:
+                        dt, dims = shapes[-1]
+                        n = 1
+                        for d in dims:
+                            n *= d
+                        size = n * _DTYPE_BYTES.get(dt, 4)
+                g = _group_size(ins.line)
+                if g <= 1:
+                    continue
+                if base == "all-reduce":
+                    wire = 2 * (g - 1) / g * size
+                elif base == "all-gather":
+                    wire = (g - 1) / g * size
+                elif base == "reduce-scatter":
+                    wire = (g - 1) * size
+                elif base == "all-to-all":
+                    wire = (g - 1) / g * size
+                else:
+                    wire = size
+                total.wire[base] = total.wire.get(base, 0.0) + wire
+        memo[cname] = total
+        return total
+
+    # entry computation: the one named like main / with ENTRY marker
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        entry = next(iter(comps))
+    # ENTRY header may not have been captured as a computation block opener
+    if entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c]))
+    return cost_of(entry)

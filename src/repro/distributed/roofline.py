@@ -1,0 +1,159 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+memory term     = HLO_bytes / (chips × HBM_bw)
+collective term = wire_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD HLO text (shapes there are per-device), with ring
+wire formulas per op:
+  all-reduce      2(g−1)/g × result
+  all-gather      (g−1)/g × result
+  reduce-scatter  (g−1)   × result        (operand = g × result)
+  all-to-all      (g−1)/g × result
+  collective-permute       result
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline", "Roofline"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+HW = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, link_bw=LINK_BW)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [n_groups,group_size]<=[total]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].lstrip("{")
+        ids = [x for x in first.split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring formulas)."""
+    out: Dict[str, float] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line:
+            continue  # async pair: count the -start only
+        result_type, op = m.group(1), m.group(2)
+        size = _shape_bytes(result_type)
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / g * size
+        elif op == "all-gather":
+            wire = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire = (g - 1) * size
+        elif op == "all-to-all":
+            wire = (g - 1) / g * size
+        else:  # collective-permute
+            wire = size
+        out[op] = out.get(op, 0.0) + wire
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    by_collective: Dict[str, float]
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "by_collective": self.by_collective,
+        }
+
+
+def roofline(compiled, chips: int) -> Roofline:
+    """Three roofline terms from the compiled artifact.
+
+    Uses the loop-aware HLO walker (hlo_cost) rather than
+    ``compiled.cost_analysis()`` because the latter counts while-loop
+    (lax.scan layer stack) bodies exactly once — see EXPERIMENTS.md §Roofline
+    for the calibration.  All values are per-device.
+    """
+    from . import hlo_cost
+
+    text = compiled.as_text()
+    cost = hlo_cost.analyze_hlo(text)
+    return Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                    wire_bytes=cost.wire_bytes, by_collective=dict(cost.wire),
+                    chips=chips)

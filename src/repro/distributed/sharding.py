@@ -1,0 +1,54 @@
+"""Spec-axis → NamedSharding resolution.
+
+Model param specs carry literal axis tags: "model", "fsdp" (resolved to the
+innermost data axis when FSDP is on, else dropped) or None.  This module
+turns a spec tree into NamedSharding / PartitionSpec trees and validates
+divisibility so a bad mesh fails loudly at lowering time, not deep in XLA.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.params import Spec
+
+__all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec"]
+
+
+def spec_pspec(spec: Spec, ctx) -> P:
+    """PartitionSpec for one param Spec under the given MeshCtx."""
+    out = []
+    for dim, ax in zip(spec.shape, spec.axes):
+        if ax is None:
+            out.append(None)
+            continue
+        mesh_ax = ctx.fsdp_axis if ax == "fsdp" else ax
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        size = ctx.axis_size(mesh_ax)
+        if size > 1 and dim % size != 0:
+            raise ValueError(
+                f"dim {dim} of {spec.shape} not divisible by mesh axis "
+                f"{mesh_ax}={size}")
+        out.append(mesh_ax)
+    return P(*out)
+
+
+def param_pspecs(tree: Any, ctx) -> Any:
+    return jax.tree.map(lambda s: spec_pspec(s, ctx), tree,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def param_shardings(tree: Any, ctx) -> Any:
+    if ctx.mesh is None:
+        raise ValueError("param_shardings requires a mesh")
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, spec_pspec(s, ctx)),
+                        tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def data_pspec(ctx, ndim: int) -> P:
+    """Batch-sharded PartitionSpec for an input of rank ``ndim``."""
+    return P(ctx.dp_axes, *([None] * (ndim - 1)))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the piCholesky hot spots.
+
+  chol_blocked  blocked right-looking Cholesky (potf2 + trsm-as-GEMM + syrk)
+  tri_pack      tile-major triangular pack/unpack (§5 TPU adaptation)
+  poly_interp   fused Horner evaluation + unpack (beyond-paper fusion)
+  trsm          blocked substitution with pre-inverted diagonal tiles
+  ops           jit'd wrappers (REPRO_KERNELS=pallas|ref)
+  ref           pure-jnp oracles
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,151 @@
+"""Blocked right-looking Cholesky as Pallas TPU kernels.
+
+The factorization ``A = LLᵀ`` is the paper's dominant O(d³) cost.  TPU-native
+structure (MXU tiles instead of LAPACK panels):
+
+* ``_panel_kernel`` — one pallas_call per tile-column: grid step 0 runs the
+  unblocked ``potf2`` on the diagonal tile **and** forms ``L₁₁⁻¹`` in a VMEM
+  scratch (persists across the sequential TPU grid); steps i>0 are pure MXU
+  GEMMs ``L_{i1} = A_{i1}·L₁₁⁻ᵀ`` (the trsm, recast as a matmul against the
+  cached inverse — triangular solves don't vectorize on the MXU, matmuls do).
+* ``_syrk_kernel`` — trailing update ``A₂₂ −= L₂₁L₂₁ᵀ`` over the lower tiles
+  only (grid masks the strictly-upper tiles to a copy-through).
+
+The JAX-level driver walks tile columns; every FLOP executed between panel
+potf2s is a dense ``B×B`` MXU matmul, which is what drives this kernel
+toward the compute roofline on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["cholesky_blocked"]
+
+
+def _potf2(a: jax.Array) -> jax.Array:
+    """Unblocked Cholesky of a B×B tile (functional, in-register)."""
+    b = a.shape[0]
+    iota = jax.lax.iota(jnp.int32, b)
+
+    def body(k, a):
+        pivot = jnp.sqrt(a[k, k])
+        col = jnp.where(iota > k, a[:, k] / pivot, 0.0)
+        col = jnp.where(iota == k, pivot, col)
+        mask = (iota[:, None] > k) & (iota[None, :] > k)
+        a = jnp.where(mask, a - col[:, None] * col[None, :], a)
+        return a.at[:, k].set(col)
+
+    a = jax.lax.fori_loop(0, b, body, a)
+    return jnp.where(iota[:, None] >= iota[None, :], a, 0.0)
+
+
+def _inv_lower(l: jax.Array) -> jax.Array:
+    """X with L X = I via row-wise forward substitution (in-register)."""
+    b = l.shape[0]
+    iota = jax.lax.iota(jnp.int32, b)
+    eye = jnp.eye(b, dtype=l.dtype)
+
+    def body(k, x):
+        row = l[k]
+        s = jnp.sum(jnp.where((iota < k)[:, None], x, 0.0) * row[:, None], axis=0)
+        return x.at[k].set((eye[k] - s) / l[k, k])
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(l))
+
+
+def _panel_kernel(panel_ref, out_ref, inv_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _diag():
+        l11 = _potf2(panel_ref[...])
+        inv_ref[...] = _inv_lower(l11)
+        out_ref[...] = l11
+
+    @pl.when(i > 0)
+    def _sub():
+        # trsm recast as GEMM against the cached inverse: A·(L⁻¹)ᵀ
+        out_ref[...] = jnp.dot(
+            panel_ref[...], inv_ref[...].T, preferred_element_type=out_ref.dtype
+        )
+
+
+def _syrk_kernel(panel_i_ref, panel_j_ref, c_ref, out_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i >= j)
+    def _update():
+        out_ref[...] = c_ref[...] - jnp.dot(
+            panel_i_ref[...], panel_j_ref[...].T, preferred_element_type=out_ref.dtype
+        )
+
+    @pl.when(i < j)
+    def _copy():
+        out_ref[...] = c_ref[...]
+
+
+def _factor_panel(panel: jax.Array, block: int, interpret: bool) -> jax.Array:
+    m = panel.shape[0]
+    nt = m // block
+    return pl.pallas_call(
+        _panel_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((block, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(panel.shape, panel.dtype),
+        scratch_shapes=[pltpu.MemorySpace.VMEM((block, block), panel.dtype)],
+        interpret=interpret,
+    )(panel)
+
+
+def _syrk_update(trailing: jax.Array, panel: jax.Array, block: int,
+                 interpret: bool) -> jax.Array:
+    m = trailing.shape[0]
+    nt = m // block
+    return pl.pallas_call(
+        _syrk_kernel,
+        grid=(nt, nt),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, block), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(trailing.shape, trailing.dtype),
+        interpret=interpret,
+    )(panel, panel, trailing)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def cholesky_blocked(a: jax.Array, block: int = 256, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Cholesky factor of SPD ``a`` (h×h) -> lower-triangular L (h×h)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    h = a.shape[-1]
+    nt = -(-h // block)
+    hp = nt * block
+    if hp != h:
+        # pad with identity on the trailing diagonal — keeps potf2 finite
+        a = jnp.pad(a, ((0, hp - h), (0, hp - h)))
+        a = a.at[h:, h:].set(jnp.eye(hp - h, dtype=a.dtype))
+
+    out = a
+    for j in range(nt):
+        lo = j * block
+        panel = jax.lax.dynamic_slice(out, (lo, lo), (hp - lo, block))
+        panel = _factor_panel(panel, block, interpret)
+        out = jax.lax.dynamic_update_slice(out, panel, (lo, lo))
+        if j + 1 < nt:
+            sub = jax.lax.dynamic_slice(panel, (block, 0), (hp - lo - block, block))
+            trailing = jax.lax.dynamic_slice(
+                out, (lo + block, lo + block), (hp - lo - block, hp - lo - block))
+            trailing = _syrk_update(trailing, sub, block, interpret)
+            out = jax.lax.dynamic_update_slice(out, trailing, (lo + block, lo + block))
+    return jnp.tril(out[:h, :h])

@@ -1,0 +1,64 @@
+"""Public jit'd entry points for the Pallas kernel layer.
+
+``kernel_backend()`` decides per-call whether to run the real Pallas path
+(interpret=True on CPU, compiled on TPU) or fall back to the jnp oracle —
+callers toggle with the ``REPRO_KERNELS`` env var ("pallas" | "ref").
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import chol_blocked, poly_interp, ref, ssm_scan as ssm_scan_mod, tri_pack, trsm
+
+__all__ = ["kernel_backend", "pack_tril", "unpack_tril", "cholesky",
+           "interp_factors", "solve_lower", "solve_factor_sweep", "ssm_scan"]
+
+
+def kernel_backend() -> str:
+    return os.environ.get("REPRO_KERNELS", "pallas")
+
+
+def pack_tril(mat, block: int = 128):
+    if kernel_backend() == "ref":
+        return ref.pack_tril(mat, block)
+    return tri_pack.pack_tril(mat, block)
+
+
+def unpack_tril(vec, h: int, block: int = 128):
+    if kernel_backend() == "ref":
+        return ref.unpack_tril(vec, h, block)
+    return tri_pack.unpack_tril(vec, h, block)
+
+
+def cholesky(a, block: int = 256):
+    if kernel_backend() == "ref":
+        return ref.cholesky(a)
+    return chol_blocked.cholesky_blocked(a, block)
+
+
+def interp_factors(theta, lams, h: int, block: int = 128, center=0.0):
+    if kernel_backend() == "ref":
+        return ref.interp_factors(theta, lams, h, block, center)
+    return poly_interp.interp_factors(theta, lams, h, block, center=center)
+
+
+def solve_lower(l, g, block: int = 256, *, transpose: bool = False):
+    if kernel_backend() == "ref":
+        return ref.solve_lower(l, g, transpose=transpose)
+    return trsm.solve_lower_blocked(l, g, block, transpose=transpose)
+
+
+def solve_factor_sweep(ls, g, block: int = 256):
+    if kernel_backend() == "ref":
+        return ref.solve_factor_sweep(ls, g)
+    return trsm.solve_factor_sweep(ls, g, block)
+
+
+def ssm_scan(xc, dt, b_mat, c_mat, a, d_skip, chunk: int = 128,
+             di_block: int = 256):
+    if kernel_backend() == "ref":
+        return ref.ssm_scan(xc, dt, b_mat, c_mat, a, d_skip)
+    return ssm_scan_mod.ssm_scan(xc, dt, b_mat, c_mat, a, d_skip,
+                                 chunk=chunk, di_block=di_block)

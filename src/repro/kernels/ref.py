@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, picholesky
+
+__all__ = ["pack_tril", "unpack_tril", "cholesky", "interp_factors",
+           "solve_lower", "solve_factor_sweep", "ssm_scan"]
+
+
+def pack_tril(mat: jax.Array, block: int) -> jax.Array:
+    return packing.pack_tril(mat, block)
+
+
+def unpack_tril(vec: jax.Array, h: int, block: int) -> jax.Array:
+    return packing.unpack_tril(vec, h, block)
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    return jnp.linalg.cholesky(a)
+
+
+def interp_factors(theta: jax.Array, lams: jax.Array, h: int, block: int,
+                   center=0.0) -> jax.Array:
+    model = picholesky.PiCholesky(
+        theta=theta, center=jnp.asarray(center, theta.dtype), h=h, block=block)
+    return model.eval_factor(lams)
+
+
+def solve_lower(l: jax.Array, g: jax.Array, *, transpose: bool = False) -> jax.Array:
+    g2 = g[:, None] if g.ndim == 1 else g
+    g2 = g2.astype(l.dtype)
+    w = jax.lax.linalg.triangular_solve(
+        l, g2, left_side=True, lower=True, transpose_a=transpose)
+    return w[:, 0] if g.ndim == 1 else w
+
+
+def solve_factor_sweep(ls: jax.Array, g: jax.Array) -> jax.Array:
+    def one(l):
+        w = solve_lower(l, g)
+        return solve_lower(l, w, transpose=True)
+
+    return jax.vmap(one)(ls)
+
+
+def ssm_scan(xc, dt, b_mat, c_mat, a, d_skip):
+    """Selective-scan oracle (see kernels/ssm_scan.py)."""
+    bsz, s, di = xc.shape
+    n = a.shape[-1]
+    xc, dt = xc.astype(jnp.float32), dt.astype(jnp.float32)
+    a_bar = jnp.exp(dt[..., None] * a.astype(jnp.float32))
+    bx = (dt * xc)[..., None] * b_mat[:, :, None, :].astype(jnp.float32)
+
+    def step(h, ab):
+        h = ab[0] * h + ab[1]
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, jnp.zeros((bsz, di, n), jnp.float32),
+                              (jnp.moveaxis(a_bar, 1, 0),
+                               jnp.moveaxis(bx, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1)
+    y = (jnp.einsum("bsdn,bsn->bsd", hs, c_mat.astype(jnp.float32))
+         + d_skip.astype(jnp.float32) * xc)
+    return y, h_last

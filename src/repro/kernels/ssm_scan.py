@@ -1,0 +1,104 @@
+"""Pallas TPU selective-scan (Mamba-1) kernel — the SSM-family hot spot.
+
+EXPERIMENTS.md §Perf (falcon) shows pure-XLA selective scan is HBM-bound:
+the (B,S,d_inner,N) decay/input tensors and the associative-scan levels are
+all materialized.  The kernel fuses the whole recurrence:
+
+    read  xc, dt (B,S,di) and B, C (B,S,N) once
+    keep  h (di_blk, N) in VMEM across the sequential S grid dimension
+    write y (B,S,di) once
+
+True DMA ≈ 4·B·S·di + 2·B·S·N elements — ~N×16 less than the XLA path.
+Grid (B, di/di_blk, S/chunk): S innermost (TPU grids iterate sequentially,
+so the VMEM carry h is valid across chunks of the same (b, di_blk)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan"]
+
+
+def _kernel(xc_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, hlast_ref,
+            h_scr, *, chunk: int, n_chunks: int):
+    sc = pl.program_id(2)
+
+    @pl.when(sc == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...]                      # (di_blk, N)
+    d_skip = d_ref[...]                 # (di_blk,)
+
+    def step(t, h):
+        xt = xc_ref[0, t, :]            # (di_blk,)
+        dtt = dt_ref[0, t, :]
+        bt = b_ref[0, t, :]             # (N,)
+        ct = c_ref[0, t, :]
+        a_bar = jnp.exp(dtt[:, None] * a)                    # (di_blk, N)
+        bx = (dtt * xt)[:, None] * bt[None, :]
+        h = a_bar * h + bx
+        y = jnp.sum(h * ct[None, :], axis=1) + d_skip * xt   # (di_blk,)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(sc == n_chunks - 1)
+    def _final():
+        hlast_ref[0] = h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "di_block", "interpret"))
+def ssm_scan(xc: jax.Array, dt: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+             a: jax.Array, d_skip: jax.Array, *, chunk: int = 128,
+             di_block: int = 256, interpret: bool | None = None):
+    """Fused selective scan.
+
+    xc, dt: (B, S, di);  b_mat, c_mat: (B, S, N);  a: (di, N) [negative];
+    d_skip: (di,).  Returns (y (B,S,di) f32, h_last (B,di,N) f32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bsz, s, di = xc.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    di_block = min(di_block, di)
+    assert s % chunk == 0 and di % di_block == 0, (s, chunk, di, di_block)
+    n_chunks = s // chunk
+    n_dblk = di // di_block
+
+    f32 = jnp.float32
+    grid = (bsz, n_dblk, n_chunks)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda b, d, sc: (b, sc, d)),
+            pl.BlockSpec((1, chunk, di_block), lambda b, d, sc: (b, sc, d)),
+            pl.BlockSpec((1, chunk, n), lambda b, d, sc: (b, sc, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, d, sc: (b, sc, 0)),
+            pl.BlockSpec((di_block, n), lambda b, d, sc: (d, 0)),
+            pl.BlockSpec((di_block,), lambda b, d, sc: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda b, d, sc: (b, sc, d)),
+            pl.BlockSpec((1, di_block, n), lambda b, d, sc: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), f32),
+            jax.ShapeDtypeStruct((bsz, di, n), f32),
+        ],
+        scratch_shapes=[pltpu.MemorySpace.VMEM((di_block, n), f32)],
+        interpret=interpret,
+    )(xc.astype(f32), dt.astype(f32), b_mat.astype(f32), c_mat.astype(f32),
+      a.astype(f32), d_skip.astype(f32))
+    return y, h_last

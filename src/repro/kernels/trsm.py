@@ -1,0 +1,105 @@
+"""Blocked triangular solves (the per-λ back-end of §3.2) as Pallas kernels.
+
+Solving ``L w = g`` / ``Lᵀ θ = w`` for the whole λ sweep at once makes the
+right-hand side a (h × q) block — so the substitution becomes a chain of
+``B×B @ B×q`` MXU GEMMs instead of q separate vector solves.  Diagonal tiles
+are pre-inverted once (q-independent) so the kernel contains no sequential
+scalar solve at all.
+
+Kernel layout: sequential grid over tile-rows; the full RHS block lives in
+VMEM as the output ref (revisited every step), each step reads one (B × h)
+row-panel of L, masks the not-yet-solved columns, and updates its B rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["solve_lower_blocked", "solve_factor_sweep"]
+
+
+def _make_solve_kernel(block: int, nt: int, reverse: bool):
+    def kernel(panel_ref, inv_ref, g_ref, w_ref):
+        step = pl.program_id(0)
+
+        @pl.when(step == 0)
+        def _init():  # unsolved rows must be 0.0, not uninitialized VMEM
+            w_ref[...] = jnp.zeros_like(w_ref)
+
+        i = (nt - 1 - step) if reverse else step
+        h = nt * block
+        col = jax.lax.broadcasted_iota(jnp.int32, (block, h), 1)
+        if reverse:
+            mask = col >= (i + 1) * block   # columns already solved (above)
+        else:
+            mask = col < i * block          # columns already solved (below)
+        panel = jnp.where(mask, panel_ref[...], 0.0)
+        w = w_ref[...]
+        s = jnp.dot(panel, w, preferred_element_type=w.dtype)
+        g_i = g_ref[pl.ds(i * block, block), :]
+        w_i = jnp.dot(inv_ref[0], g_i - s, preferred_element_type=w.dtype)
+        w_ref[pl.ds(i * block, block), :] = w_i
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "interpret", "block"))
+def solve_lower_blocked(l: jax.Array, g: jax.Array, block: int = 256, *,
+                        transpose: bool = False,
+                        interpret: bool | None = None) -> jax.Array:
+    """Solve L w = g (or Lᵀ w = g) for lower-triangular L.  g: (h,) or (h, q)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    h = l.shape[-1]
+    nt = -(-h // block)
+    hp = nt * block
+    squeeze = g.ndim == 1
+    g2 = (g[:, None] if squeeze else g).astype(l.dtype)
+    q = g2.shape[1]
+    if hp != h:
+        l = jnp.pad(l, ((0, hp - h), (0, hp - h)))
+        l = l.at[h:, h:].set(jnp.eye(hp - h, dtype=l.dtype))
+        g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
+
+    mat = l.T if transpose else l
+    # row-panels of the (possibly transposed) operator, and inverted diag tiles
+    diag = jnp.stack([jax.lax.dynamic_slice(mat, (k * block, k * block),
+                                            (block, block)) for k in range(nt)])
+    eye = jnp.eye(block, dtype=l.dtype)
+    inv_diag = jax.lax.linalg.triangular_solve(
+        diag, jnp.broadcast_to(eye, diag.shape), left_side=True,
+        lower=not transpose, transpose_a=False)
+
+    kernel = _make_solve_kernel(block, nt, reverse=transpose)
+
+    def row_index(step, *_):
+        return ((nt - 1 - step) if transpose else step, 0)
+
+    w = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block, hp), row_index),
+            pl.BlockSpec((1, block, block),
+                         lambda step: ((nt - 1 - step) if transpose else step, 0, 0)),
+            pl.BlockSpec((hp, q), lambda step: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((hp, q), lambda step: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, q), g2.dtype),
+        interpret=interpret,
+    )(mat, inv_diag, g2)
+    w = w[:h]
+    return w[:, 0] if squeeze else w
+
+
+def solve_factor_sweep(ls: jax.Array, g: jax.Array, block: int = 256, *,
+                       interpret: bool | None = None) -> jax.Array:
+    """Solve L_t L_tᵀ θ_t = g for a sweep of factors (q, h, h) -> (q, h)."""
+    def one(l):
+        w = solve_lower_blocked(l, g, block, transpose=False, interpret=interpret)
+        return solve_lower_blocked(l, w, block, transpose=True, interpret=interpret)
+
+    return jax.vmap(one)(ls)

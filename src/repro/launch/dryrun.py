@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# The two lines above MUST precede any jax import — jax locks the device
+# count at first init.  (They also force this file to skip `from __future__`.)
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes] [--out results/dryrun]
+#
+# Per cell this prints/records memory_analysis() (fits / doesn't),
+# cost_analysis() FLOPs+bytes, and the parsed per-device collective wire
+# bytes — the raw inputs for EXPERIMENTS.md §Dry-run and §Roofline.
+
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed import roofline as rl
+from repro.distributed.context import MeshCtx
+from repro.launch import specs as specmod
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import adafactor, adamw
+from repro.train.steps import make_train_step
+
+FSDP_THRESHOLD = 2e9  # params; above this weights shard over data too
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool):
+    cfg = configs.get(arch)
+    meta = configs.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = cfg.n_params() > FSDP_THRESHOLD
+    ctx = MeshCtx.from_mesh(mesh, fsdp=fsdp)
+    model = Model(cfg, ctx)
+    return cfg, meta, mesh, ctx, model
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               microbatches: Optional[int] = None):
+    """Returns (lowered, chips, note). Raises on sharding/lowering bugs."""
+    cfg, meta, mesh, ctx, model = build_cell(arch, shape, multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    seq, batch = meta["seq_len"], meta["global_batch"]
+    kind = meta["kind"]
+
+    params_abs = specmod.param_specs_sharded(model)
+    p_shardings = jax.tree.map(lambda s: s.sharding, params_abs)
+
+    if kind == "train":
+        # the 1T MoE uses adafactor + grad accumulation (see DESIGN.md §6)
+        big = cfg.n_params() > 3e11
+        opt = adafactor() if big else adamw()
+        mb = microbatches or (2 if big else 1)
+        opt_abs = specmod.opt_state_specs(opt[0], model)
+        o_shardings = jax.tree.map(lambda s: s.sharding, opt_abs)
+        batch_abs = specmod.batch_specs(cfg, ctx, batch, seq, with_labels=True)
+        extra_abs = specmod.extra_specs(cfg, ctx, batch, seq)
+        step = make_train_step(model, opt, microbatches=mb)
+        fn = jax.jit(step, donate_argnums=(0, 1),
+                     out_shardings=(p_shardings, o_shardings, None))
+        args = (params_abs, opt_abs, batch_abs, extra_abs)
+        note = f"train mb={mb} opt={'adafactor' if big else 'adamw'} fsdp={ctx.fsdp}"
+    elif kind == "prefill":
+        batch_abs = specmod.batch_specs(cfg, ctx, batch, seq, with_labels=False)
+        extra_abs = specmod.extra_specs(cfg, ctx, batch, seq)
+
+        def prefill(params, tokens, extra):
+            return model.prefill(params, tokens, extra)
+
+        fn = jax.jit(prefill)
+        args = (params_abs, batch_abs["tokens"], extra_abs)
+        note = f"prefill fsdp={ctx.fsdp}"
+    else:  # decode
+        extra_len = 0
+        if cfg.family == "audio":
+            extra_len = seq // cfg.enc_seq_ratio
+        elif cfg.family == "vlm":
+            extra_len = cfg.n_image_tokens
+        cache_abs = specmod.cache_specs(model, batch, seq, extra_len)
+        tok = jax.ShapeDtypeStruct(
+            (batch, 1), jnp.int32,
+            sharding=ctx.sharding(ctx.dp_axes if batch % ctx.dp_size == 0
+                                  else None, None))
+
+        def decode(params, cache, tokens):
+            return model.decode(params, cache, tokens)
+
+        fn = jax.jit(decode)
+        args = (params_abs, cache_abs, tok)
+        note = f"decode cache={seq} fsdp={ctx.fsdp}"
+
+    with mesh:
+        lowered = fn.lower(*args)
+    return lowered, chips, note
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    cell = f"{arch}×{shape}×{'2x16x16' if multi_pod else '16x16'}"
+    cfgmeta = configs.SHAPES[shape]
+    cfg = configs.get(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return {"cell": cell, "status": "skip",
+                "reason": "pure full-attention arch (DESIGN.md §5)"}
+    t0 = time.time()
+    try:
+        lowered, chips, note = lower_cell(arch, shape, multi_pod=multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = getattr(mem, k, None)
+        roof = rl.roofline(compiled, chips)
+        n = cfg.n_params()
+        n_act = cfg.n_active_params()
+        tokens = cfgmeta["global_batch"] * (cfgmeta["seq_len"]
+                                            if cfgmeta["kind"] != "decode" else 1)
+        mult = 6 if cfgmeta["kind"] == "train" else 2
+        model_flops = mult * n_act * tokens
+        total_hlo_flops = roof.flops * chips
+        result = {
+            "cell": cell, "status": "ok", "note": note, "chips": chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem_d,
+            "roofline": roof.summary(),
+            "n_params": n, "n_active_params": n_act,
+            "model_flops": model_flops,
+            "useful_flops_frac": (model_flops / total_hlo_flops
+                                  if total_hlo_flops else None),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result = {"cell": cell, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    if verbose:
+        st = result["status"]
+        if st == "ok":
+            r = result["roofline"]
+            print(f"[{st}] {cell}  {result['note']}  "
+                  f"compile={result['compile_s']}s  "
+                  f"bottleneck={r['bottleneck']}  "
+                  f"compute={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s", flush=True)
+        else:
+            print(f"[{st}] {cell}  "
+                  f"{result.get('reason', result.get('error'))}", flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name, shape, meta, skip in configs.cells():
+            cells.append((name, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            res = run_cell(arch, shape, multi_pod=mp)
+            results.append(res)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}.json"
+                with open(os.path.join(args.out, tag), "w") as f:
+                    json.dump(res, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skip, {n_err} error ==")
+    if n_err:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

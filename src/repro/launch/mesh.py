@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not module-level constant) so importing never touches jax
+device state.  Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — the "pod"
+axis carries only data parallelism (gradient all-reduce crosses the
+inter-pod DCN/optical links; everything bandwidth-hungry stays on-pod).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many real devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

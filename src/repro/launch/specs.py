@@ -1,0 +1,165 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every dry-run input.
+
+No device allocation happens here: params, optimizer state and caches are
+built with ``jax.eval_shape`` / abstract trees, each leaf annotated with its
+NamedSharding so ``jit(...).lower()`` sees the production layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+from repro.distributed.context import MeshCtx
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+__all__ = ["batch_specs", "extra_specs", "cache_specs", "opt_state_specs",
+           "param_specs_sharded", "attach"]
+
+
+def attach(tree: Any, pspecs: Any, ctx: MeshCtx) -> Any:
+    """ShapeDtypeStruct tree + pspec tree -> sharded ShapeDtypeStruct tree."""
+    def one(sds, ps):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(ctx.mesh, ps))
+
+    return jax.tree.map(one, tree, pspecs)
+
+
+def param_specs_sharded(model: Model) -> Any:
+    ctx = model.ctx
+    abstract = model.abstract()
+    pspecs = shlib.param_pspecs(model.param_specs(), ctx)
+    return attach(abstract, pspecs, ctx)
+
+
+def batch_specs(cfg: ModelConfig, ctx: MeshCtx, batch: int, seq: int,
+                *, with_labels: bool) -> Dict:
+    dp = ctx.dp_axes
+    bspec = P(dp, None) if batch % ctx.dp_size == 0 else P(None, None)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                               sharding=ctx.sharding(*bspec))
+    out = {"tokens": tok}
+    if with_labels:
+        out["labels"] = tok
+    return out
+
+
+def extra_specs(cfg: ModelConfig, ctx: MeshCtx, batch: int, seq: int) -> Optional[Dict]:
+    dp = ctx.dp_axes
+    brow = dp if batch % ctx.dp_size == 0 else None
+    if cfg.family == "audio":
+        shape = (batch, seq // cfg.enc_seq_ratio, cfg.d_model)
+        return {"enc_frames": jax.ShapeDtypeStruct(
+            shape, cfg.activation_dtype,
+            sharding=ctx.sharding(brow, None, None))}
+    if cfg.family == "vlm":
+        shape = (batch, cfg.n_image_tokens, cfg.d_model)
+        return {"image_embeds": jax.ShapeDtypeStruct(
+            shape, cfg.activation_dtype,
+            sharding=ctx.sharding(brow, None, None))}
+    return None
+
+
+def _cache_leaf_pspec(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                      ctx: MeshCtx, batch: int) -> P:
+    """Sharding for one cache leaf, by leaf name + rank.
+
+    Batch dim shards over dp when divisible; otherwise (long_500k, B=1) the
+    cache *sequence* dim takes the dp axes — flash-decode style sequence
+    parallelism.  Head_dim / d_inner follow the weight TP layout.
+    """
+    dp = ctx.dp_axes
+    tp = ctx.tp_size
+    b_ok = batch % ctx.dp_size == 0
+    leaf = path.split("/")[-1]
+    if leaf == "pos":
+        return P()
+    none = (None,) * len(shape)
+    if leaf in ("k", "v"):                    # (G?, B, S, KV, hd)
+        off = len(shape) - 4
+        lead = (None,) * off
+        kvh, kvd = None, None
+        if cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0:
+            kvh = "model"
+        elif cfg.n_heads % tp != 0 and cfg.head_dim_ % tp == 0:
+            kvd = "model"
+        if b_ok:
+            return P(*lead, dp, None, kvh, kvd)
+        seq = shape[off + 1]
+        sp = dp if seq % ctx.dp_size == 0 else None
+        return P(*lead, None, sp, kvh, kvd)
+    if leaf == "conv":                        # (G?, B, K-1, C)
+        off = len(shape) - 3
+        lead = (None,) * off
+        c = shape[-1]
+        cax = "model" if c % tp == 0 else None
+        return P(*lead, dp if b_ok else None, None, cax)
+    if leaf == "h":                           # mamba (G?,B,di,N) / rglru (G?,B,W)
+        if shape[-1] == cfg.ssm_state and cfg.family == "ssm":
+            off = len(shape) - 3
+            di = shape[-2]
+            return P(*((None,) * off), dp if b_ok else None,
+                     "model" if di % tp == 0 else None, None)
+        off = len(shape) - 2
+        w = shape[-1]
+        return P(*((None,) * off), dp if b_ok else None,
+                 "model" if w % tp == 0 else None)
+    return none and P(*none)
+
+
+def cache_specs(model: Model, batch: int, cache_len: int,
+                extra_len: int = 0) -> Any:
+    cfg, ctx = model.cfg, model.ctx
+    abstract = jax.eval_shape(
+        lambda: model.init_cache(batch, cache_len, extra_len))
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        ps = _cache_leaf_pspec(name, leaf.shape, cfg, ctx, batch)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=ctx.sharding(*ps))
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def opt_state_specs(opt_init, model: Model) -> Any:
+    """Abstract optimizer state with shardings derived from the params.
+
+    Elementwise moments inherit the param pspec; factored (adafactor)
+    moments inherit the pspec minus the reduced dim.
+    """
+    ctx = model.ctx
+    params_abs = model.abstract()
+    pspecs = shlib.param_pspecs(model.param_specs(), ctx)
+    state_abs = jax.eval_shape(opt_init, params_abs)
+
+    flat_p, _ = jax.tree.flatten(params_abs)
+    flat_ps, _ = jax.tree.flatten(pspecs)
+    by_shape = {}
+    for p, ps in zip(flat_p, flat_ps):
+        by_shape.setdefault(p.shape, ps)
+
+    def one(leaf):
+        ps = by_shape.get(leaf.shape)
+        if ps is None:
+            # factored moment: match a param whose prefix/suffix agrees
+            for shape, cand in by_shape.items():
+                if len(shape) == len(leaf.shape) + 1:
+                    if shape[:-1] == leaf.shape:       # row factor
+                        ps = P(*cand[:-1]) if cand else None
+                        break
+                    if shape[:-2] + shape[-1:] == leaf.shape:  # col factor
+                        ps = P(*(cand[:-2] + cand[-1:])) if cand else None
+                        break
+        if ps is None:
+            ps = P()
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=ctx.sharding(*ps))
+
+    return jax.tree.map(one, state_abs)

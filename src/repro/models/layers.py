@@ -1,0 +1,410 @@
+"""Shared neural-net primitives for the architecture zoo.
+
+Everything is functional (params dict in, array out), fp32 for norms /
+softmax / recurrences, activation dtype elsewhere.  Attention is
+flash-style (q- and kv-chunked online softmax) so 32k-token prefill never
+materializes an S×S score matrix.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "rope", "flash_attention", "decode_attention",
+    "mlp", "chunked_linear_recurrence", "causal_conv1d",
+]
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with dtype-preserving backward.
+
+    Forward: variance via an f32-accumulating dot on bf16 inputs (no f32
+    copy of x exists, so XLA can't hoist an (L,B,S,D) f32 convert of the
+    saved residual stack out of the backward loop).  Backward: custom vjp
+    keeps dx in x.dtype — the naive AD path upcasts the entire residual
+    cotangent to f32 through the variance branch, doubling every backward
+    collective and activation store (EXPERIMENTS.md §Perf, kimi iter 3).
+    """
+    inv, _ = _rms_inv(x, eps)
+    return x * inv * (1.0 + scale.astype(x.dtype))
+
+
+def _rms_inv(x, eps):
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    var = var / x.shape[-1]
+    inv_f32 = jax.lax.rsqrt(var + eps)
+    return inv_f32.astype(x.dtype), inv_f32
+
+
+def _rms_norm_fwd(x, scale, eps):
+    inv, inv_f32 = _rms_inv(x, eps)
+    return x * inv * (1.0 + scale.astype(x.dtype)), (x, inv, scale)
+
+
+def _rms_norm_bwd(eps, res, dy):
+    x, inv, scale = res
+    n = x.shape[-1]
+    g = dy * (1.0 + scale.astype(dy.dtype))
+    # Σ g·x in f32 (accumulating dot), correction applied in x.dtype
+    gx = jnp.einsum("...d,...d->...", g, x,
+                    preferred_element_type=jnp.float32)[..., None]
+    inv_f32 = inv.astype(jnp.float32)
+    corr = (inv_f32 * inv_f32 * inv_f32 * gx / n).astype(x.dtype)
+    dx = g * inv - x * corr
+    dscale = jnp.einsum("...d,...d->d", dy.astype(jnp.float32),
+                        (x * inv).astype(jnp.float32)).astype(scale.dtype)
+    return dx, dscale
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    if positions.ndim == 1:
+        ang = positions[None, :, None].astype(jnp.float32) * freqs
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd)
+
+
+def _mask_bias(qp, kp, sk0, causal, window, qc, kc):
+    """Additive attention bias (qc, kc) f32: 0 where visible, −inf where not.
+
+    An additive bias (instead of a broadcast boolean select) keeps the
+    layer-loop-invariant value XLA hoists at (qc,kc) f32 instead of a
+    (nq,nk,B,qc,H,kc) pred stack — see EXPERIMENTS.md §Perf iteration 1.
+    """
+    mask = jnp.broadcast_to(kp[None, :] < sk0, (qc, kc))   # kv padding
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= qp[:, None] - kp[None, :] < window
+    return jnp.where(mask, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _flash_core(causal, window, q_offset, qc, kc, sq0, sk0):
+    """custom_vjp flash attention with recompute backward.
+
+    lax.scan AD would otherwise stash per-step score-sized residuals
+    ((nk, B, qc, H, kc) stacks — O(S²) memory again); the custom backward
+    saves only (q, k, v, o, m, l) and recomputes score blocks chunkwise,
+    exactly like the TPU kernel would.
+    """
+
+    def fwd_chunks(q, k, v):
+        b, sq, h, hd = q.shape
+        nq, nk = sq // qc, k.shape[1] // kc
+        scale = 1.0 / math.sqrt(hd)
+        ks = jnp.moveaxis(k.reshape(b, nk, kc, h, hd), 1, 0)
+        vs = jnp.moveaxis(v.reshape(b, nk, kc, h, hd), 1, 0)
+
+        def q_body(_, qi):
+            q_blk, q_idx = qi
+            # optimization_barrier stops XLA from constant-folding the
+            # (nq × nk) mask grid into an S×S pred stack outside the loops
+            q_idx = jax.lax.optimization_barrier(q_idx)
+            qp = q_idx * qc + jnp.arange(qc) + q_offset
+
+            def kv_body(carry, ki):
+                m, l, acc = carry
+                k_blk, v_blk, k_idx = ki
+                k_idx = jax.lax.optimization_barrier(k_idx)
+                kp = k_idx * kc + jnp.arange(kc)
+                s = jnp.einsum("bqhd,bkhd->bqhk", q_blk.astype(jnp.float32),
+                               k_blk.astype(jnp.float32)) * scale
+                bias = _mask_bias(qp, kp, sk0, causal, window, qc, kc)
+                s = s + bias[None, :, None, :]
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.exp(s - m_safe[..., None])   # exp(-inf)=0: mask folded
+                alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bqhk,bkhd->bqhd", p, v_blk.astype(jnp.float32))
+                return (m_new, l_new, acc_new), None
+
+            init = (jnp.full((b, qc, h), -jnp.inf, jnp.float32),
+                    jnp.zeros((b, qc, h), jnp.float32),
+                    jnp.zeros((b, qc, h, hd), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, init, (ks, vs, jnp.arange(nk)))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+            return None, (out.astype(q.dtype), m_safe, l)
+
+        qs = jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0)
+        _, (out, m, l) = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+        reord = lambda x: jnp.moveaxis(x, 0, 1).reshape(b, sq, *x.shape[3:])
+        return reord(out), reord(m), reord(l)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _, _ = fwd_chunks(q, k, v)
+        return out
+
+    def attn_fwd(q, k, v):
+        out, m, l = fwd_chunks(q, k, v)
+        return out, (q, k, v, out, m, l)
+
+    def attn_bwd(res, do):
+        q, k, v, o, m, l = res
+        b, sq, h, hd = q.shape
+        nq, nk = sq // qc, k.shape[1] // kc
+        scale = 1.0 / math.sqrt(hd)
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+        linv = 1.0 / jnp.maximum(l, 1e-30)
+
+        qs = jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0)
+        dos = jnp.moveaxis(do.reshape(b, nq, qc, h, hd), 1, 0)
+        ms = jnp.moveaxis(m.reshape(b, nq, qc, h), 1, 0)
+        lis = jnp.moveaxis(linv.reshape(b, nq, qc, h), 1, 0)
+        ds_ = jnp.moveaxis(delta.reshape(b, nq, qc, h), 1, 0)
+        ks = jnp.moveaxis(k.reshape(b, nk, kc, h, hd), 1, 0)
+        vs = jnp.moveaxis(v.reshape(b, nk, kc, h, hd), 1, 0)
+
+        def kv_body(dq_acc, ki):
+            k_blk, v_blk, k_idx = ki
+            k_idx = jax.lax.optimization_barrier(k_idx)
+            kp = k_idx * kc + jnp.arange(kc)
+
+            def q_body(carry, qi):
+                dkc, dvc = carry
+                q_blk, do_blk, m_blk, li_blk, dl_blk, q_idx = qi
+                q_idx = jax.lax.optimization_barrier(q_idx)
+                qp = q_idx * qc + jnp.arange(qc) + q_offset
+                s = jnp.einsum("bqhd,bkhd->bqhk", q_blk.astype(jnp.float32),
+                               k_blk.astype(jnp.float32)) * scale
+                bias = _mask_bias(qp, kp, sk0, causal, window, qc, kc)
+                p = jnp.exp(s + bias[None, :, None, :] - m_blk[..., None])
+                p = p * li_blk[..., None]
+                dvc = dvc + jnp.einsum("bqhk,bqhd->bkhd", p,
+                                       do_blk.astype(jnp.float32))
+                dp = jnp.einsum("bqhd,bkhd->bqhk", do_blk.astype(jnp.float32),
+                                v_blk.astype(jnp.float32))
+                dsv = p * (dp - dl_blk[..., None]) * scale
+                dq_blk = jnp.einsum("bqhk,bkhd->bqhd", dsv,
+                                    k_blk.astype(jnp.float32))
+                dkc = dkc + jnp.einsum("bqhk,bqhd->bkhd", dsv,
+                                       q_blk.astype(jnp.float32))
+                return (dkc, dvc), dq_blk
+
+            init = (jnp.zeros((b, kc, h, hd), jnp.float32),
+                    jnp.zeros((b, kc, h, hd), jnp.float32))
+            (dkc, dvc), dq_blocks = jax.lax.scan(
+                q_body, init, (qs, dos, ms, lis, ds_, jnp.arange(nq)))
+            return dq_acc + dq_blocks, (dkc, dvc)
+
+        dq0 = jnp.zeros((nq, b, qc, h, hd), jnp.float32)
+        dq, (dk, dv) = jax.lax.scan(kv_body, dq0, (ks, vs, jnp.arange(nk)))
+        reord = lambda x, s: jnp.moveaxis(x, 0, 1).reshape(b, s, h, hd)
+        return (reord(dq, sq).astype(q.dtype),
+                reord(dk, k.shape[1]).astype(k.dtype),
+                reord(dv, v.shape[1]).astype(v.dtype))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def flash_attention(
+    q: jax.Array,               # (B, Sq, H, hd)
+    k: jax.Array,               # (B, Sk, KV, hd)
+    v: jax.Array,               # (B, Sk, KV, hd)
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: int = 0,          # absolute position of q[0] (cross/cache use)
+    chunk: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention, O(S) memory in fwd AND bwd.
+
+    Causality/window handled by masking (block skipping is a §Perf
+    iteration, see EXPERIMENTS.md).
+    """
+    b, sq0, h, hd = q.shape
+    sk0, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+
+    qc = min(chunk, sq0)
+    kc = min(chunk, sk0)
+    sq = -(-sq0 // qc) * qc
+    sk = -(-sk0 // kc) * kc
+    if sq != sq0:
+        q = jnp.pad(q, ((0, 0), (0, sq - sq0), (0, 0), (0, 0)))
+    if sk != sk0:
+        k = jnp.pad(k, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+
+    attn = _flash_core(causal, window, q_offset, qc, kc, sq0, sk0)
+    return attn(q, k, v)[:, :sq0]
+
+
+def decode_attention(
+    q: jax.Array,               # (B, 1, H, hd)
+    cache_k: jax.Array,         # (B, S, KV, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,             # scalar: number of valid cache entries
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    s, kv = cache_k.shape[1], cache_k.shape[2]
+    k = _repeat_kv(cache_k, h // kv)
+    v = _repeat_kv(cache_v, h // kv)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(s)
+    valid = k_pos[None, :] < pos
+    if window is not None:
+        valid &= k_pos[None, :] >= pos - window
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqhk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        hidden = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    else:
+        hidden = jax.nn.gelu(x @ p["wi"])
+    return hidden @ p["wo"]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K).
+    Returns (y, new_state) where state is the last K-1 inputs."""
+    k = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    y = jax.lax.conv_general_dilated(
+        xp, w.T[:, None, :],                          # (K, I=1, O=C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[2],
+    )
+    new_state = xp[:, -(k - 1):, :]
+    return y, new_state
+
+
+def _chunked_recurrence_impl(a: jax.Array, b: jax.Array, h0: jax.Array,
+                             chunk: int, compute_dtype):
+    if chunk == 0:   # sequential-in-time mode (mamba-kernel structure):
+        # one pass over S, h carried in registers — HBM traffic is exactly
+        # read(a,b) + write(h), no O(log chunk) associative-scan levels.
+        def step(h, ab):
+            a_t, b_t = ab
+            h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)
+            return h, h.astype(compute_dtype)
+
+        h_last, hs = jax.lax.scan(
+            step, h0.astype(jnp.float32),
+            (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+        return jnp.moveaxis(hs, 0, 1), h_last
+
+    bsz, s0 = a.shape[0], a.shape[1]
+    chunk = min(chunk, s0)
+    s = -(-s0 // chunk) * chunk
+    if s != s0:  # pad with identity steps (a=1, b=0) to preserve h_last
+        pad = [(0, 0), (0, s - s0)] + [(0, 0)] * (a.ndim - 2)
+        a = jnp.pad(a, pad, constant_values=1.0)
+        b = jnp.pad(b, pad)
+    nc = s // chunk
+    rest = a.shape[2:]
+    a_c = a.reshape(bsz, nc, chunk, *rest).astype(compute_dtype)
+    b_c = b.reshape(bsz, nc, chunk, *rest).astype(compute_dtype)
+
+    def block(carry, ab):
+        a_blk, b_blk = ab                              # (B, chunk, …)
+
+        def combine(x, y):
+            ax, bx = x
+            ay, by = y
+            return ax * ay, ay * bx + by
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a_blk, b_blk), axis=1)
+        h = a_sc * carry[:, None].astype(compute_dtype) + b_sc
+        return h[:, -1].astype(jnp.float32), h         # fp32 carry
+
+    h_last, hs = jax.lax.scan(
+        block, h0.astype(jnp.float32),
+        (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, *rest)
+    return hs[:, :s0], h_last
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def chunked_linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array,
+                              chunk: int,
+                              compute_dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t ⊙ h_{t-1} + b_t, scanned over axis 1 of (B, S, …).
+
+    Chunked: outer lax.scan over S/chunk blocks carrying h, inner
+    associative_scan within the block.  Returns (all h_t, h_S).
+    Shared by Mamba's selective scan (…= (C, N) state) and the RG-LRU.
+
+    custom_vjp: the adjoint of a linear recurrence is the same recurrence
+    run in reverse (λ_t = g_t + a_{t+1} λ_{t+1}; da_t = λ_t·h_{t-1};
+    db_t = λ_t), so the backward is one more chunked scan instead of
+    AD-through-associative-scan, which stores O(log chunk) full-size
+    intermediates per chunk (§Perf falcon iteration 2).
+    """
+    return _chunked_recurrence_impl(a, b, h0, chunk, compute_dtype)
+
+
+def _clr_fwd(a, b, h0, chunk, compute_dtype):
+    hs, h_last = _chunked_recurrence_impl(a, b, h0, chunk, compute_dtype)
+    return (hs, h_last), (a, hs, h0)
+
+
+def _clr_bwd(chunk, compute_dtype, res, ct):
+    a, hs, h0 = res
+    dhs, dh_last = ct
+    g = dhs.astype(compute_dtype)
+    if dh_last is not None:
+        g = g.at[:, -1].add(dh_last.astype(compute_dtype))
+    # shifted decay: ar_t = a_{t+1}, 0 at the end; reverse scan runs in
+    # compute_dtype — an f32 adjoint would double the dominant traffic
+    ar = jnp.concatenate(
+        [a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1).astype(compute_dtype)
+    lam_rev, _ = _chunked_recurrence_impl(
+        ar[:, ::-1], g[:, ::-1], jnp.zeros_like(h0, jnp.float32),
+        chunk, compute_dtype)
+    lam = lam_rev[:, ::-1]
+    h_prev = jnp.concatenate(
+        [h0.astype(hs.dtype)[:, None], hs[:, :-1]], axis=1)
+    da = (lam * h_prev.astype(jnp.float32)).astype(a.dtype)
+    db = lam.astype(a.dtype)
+    dh0 = (a[:, 0].astype(jnp.float32) * lam[:, 0]).astype(h0.dtype)
+    return da, db, dh0
+
+
+chunked_linear_recurrence.defvjp(_clr_fwd, _clr_bwd)

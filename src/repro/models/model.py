@@ -1,0 +1,592 @@
+"""Model assembly: embedding + scanned layer groups + head, for all families.
+
+Layer stacks are ``lax.scan`` over parameter trees with a leading group axis
+(keeps HLO size O(1) in depth — essential for 61-layer MoE compiles).
+Heterogeneous families (hybrid 2×RG-LRU+1×attn, VLM 1×cross+4×self,
+enc-dec) scan over the *repeating group*, so no layer carries unused params.
+
+Three entry points per model: ``forward`` (training/logits), ``prefill``
+(build KV/recurrent caches), ``decode`` (one token with caches) — the last
+two implement ``serve_step`` for the decode_32k / long_500k dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import MeshCtx
+
+from . import blocks
+from .config import ModelConfig
+from .params import Spec, abstract_params, init_params
+
+__all__ = ["Model"]
+
+
+def _stack(tree: Any, n: int) -> Any:
+    """Add a leading group axis of size n to every Spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (None,) + s.axes, s.init, s.scale),
+        tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+# ------------------------------------------------------------ group builders
+
+
+def _dense_group_spec(cfg: ModelConfig, ctx: MeshCtx) -> Dict:
+    g = {
+        "ln1": blocks.norm_spec(cfg),
+        "attn": blocks.attention_spec(cfg, ctx),
+        "ln2": blocks.norm_spec(cfg),
+    }
+    if cfg.family == "moe":
+        g["moe"] = blocks.moe_spec(cfg, ctx)
+    else:
+        g["mlp"] = blocks.mlp_spec(cfg, ctx)
+    return g
+
+
+def _gather_seq(ctx, x):
+    """Megatron-SP boundary: materialize the full sequence at mixer entry
+    (residual stream stays sequence-sharded; GSPMD turns the exit psum into
+    a reduce-scatter)."""
+    return ctx.constrain(x, ctx.dp_axes, None, None)
+
+
+def _dense_group_apply(gp, x, cfg, ctx):
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln1"], x, cfg))
+    x = x + blocks.attention_apply(gp["attn"], h, cfg, ctx,
+                                   window=cfg.sliding_window)
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln2"], x, cfg))
+    if cfg.family == "moe":
+        y, aux = blocks.moe_apply(gp["moe"], h, cfg, ctx)
+    else:
+        y, aux = blocks.mlp_apply(gp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _dense_group_prefill(gp, x, cfg, ctx, cache_len=None):
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    y, cache = blocks.attention_prefill(gp["attn"], h, cfg, ctx,
+                                        window=cfg.sliding_window,
+                                        cache_len=cache_len)
+    x = x + y
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    if cfg.family == "moe":
+        y, _ = blocks.moe_apply(gp["moe"], h, cfg, ctx)
+    else:
+        y = blocks.mlp_apply(gp["mlp"], h, cfg)
+    return x + y, cache
+
+
+def _dense_group_decode(gp, x, cache, pos, cfg, ctx):
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    y, cache = blocks.attention_decode(gp["attn"], h, cache, pos, cfg, ctx,
+                                       window=cfg.sliding_window)
+    x = x + y
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    if cfg.family == "moe":
+        y, _ = blocks.moe_apply(gp["moe"], h, cfg, ctx)
+    else:
+        y = blocks.mlp_apply(gp["mlp"], h, cfg)
+    return x + y, cache
+
+
+def _ssm_group_spec(cfg, ctx):
+    return {"ln": blocks.norm_spec(cfg), "mamba": blocks.mamba_spec(cfg, ctx)}
+
+
+def _rnn_sublayer_spec(cfg, ctx):
+    return {
+        "ln1": blocks.norm_spec(cfg),
+        "mix": blocks.rglru_spec(cfg, ctx),
+        "ln2": blocks.norm_spec(cfg),
+        "mlp": blocks.mlp_spec(cfg, ctx),
+    }
+
+
+def _hybrid_group_spec(cfg, ctx):
+    return {
+        "rnn": [_rnn_sublayer_spec(cfg, ctx) for _ in range(cfg.pattern_rnn)],
+        "aln1": blocks.norm_spec(cfg),
+        "attn": blocks.attention_spec(cfg, ctx),
+        "aln2": blocks.norm_spec(cfg),
+        "amlp": blocks.mlp_spec(cfg, ctx),
+    }
+
+
+def _enc_group_spec(cfg, ctx):
+    return {
+        "ln1": blocks.norm_spec(cfg),
+        "attn": blocks.attention_spec(cfg, ctx),
+        "ln2": blocks.norm_spec(cfg),
+        "mlp": blocks.mlp_spec(cfg, ctx),
+    }
+
+
+def _xdec_group_spec(cfg, ctx):
+    """Decoder layer with cross-attention (whisper)."""
+    return {
+        "ln1": blocks.norm_spec(cfg),
+        "attn": blocks.attention_spec(cfg, ctx),
+        "lnx": blocks.norm_spec(cfg),
+        "xattn": blocks.attention_spec(cfg, ctx, cross=True),
+        "ln2": blocks.norm_spec(cfg),
+        "mlp": blocks.mlp_spec(cfg, ctx),
+    }
+
+
+def _vlm_group_spec(cfg, ctx):
+    return {
+        "cross": _xdec_group_spec(cfg, ctx),   # 1 gated cross layer
+        "self": [_dense_group_spec(cfg, ctx)
+                 for _ in range(cfg.cross_attn_every - 1)],
+    }
+
+
+# ------------------------------------------------------------ model
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[MeshCtx] = None):
+        self.cfg = cfg
+        self.ctx = ctx or MeshCtx(None)
+
+    # ---- parameter tree ----
+
+    def param_specs(self) -> Dict:
+        cfg, ctx = self.cfg, self.ctx
+        v, d = cfg.vocab_size, cfg.d_model
+        vocab_ax = "model" if v % ctx.tp_size == 0 else None
+        if vocab_ax == "model":
+            emb_ax, head_in_ax = "fsdp", "fsdp"
+        elif d % ctx.tp_size == 0:
+            emb_ax, head_in_ax = "model", "model"
+        else:
+            emb_ax, head_in_ax = None, None
+        tree: Dict[str, Any] = {
+            "embed": Spec((v, d), (vocab_ax, emb_ax)),
+            "final_norm": blocks.norm_spec(cfg),
+            "lm_head": Spec((d, v), (head_in_ax, vocab_ax)),
+        }
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            tree["groups"] = _stack(_dense_group_spec(cfg, ctx), cfg.n_layers)
+        elif fam == "ssm":
+            tree["groups"] = _stack(_ssm_group_spec(cfg, ctx), cfg.n_layers)
+        elif fam == "hybrid":
+            gsz = cfg.pattern_rnn + 1
+            n_full, rem = divmod(cfg.n_layers, gsz)
+            tree["groups"] = _stack(_hybrid_group_spec(cfg, ctx), n_full)
+            if rem:
+                tree["tail"] = _stack(_rnn_sublayer_spec(cfg, ctx), rem)
+        elif fam == "audio":
+            tree["enc_groups"] = _stack(_enc_group_spec(cfg, ctx), cfg.n_enc_layers)
+            tree["enc_norm"] = blocks.norm_spec(cfg)
+            tree["groups"] = _stack(_xdec_group_spec(cfg, ctx), cfg.n_layers)
+        elif fam == "vlm":
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            tree["groups"] = _stack(_vlm_group_spec(cfg, ctx), n_groups)
+        else:
+            raise ValueError(fam)
+        return tree
+
+    def init(self, key: jax.Array) -> Dict:
+        return init_params(key, self.param_specs(),
+                           jnp.dtype(self.cfg.param_dtype))
+
+    def abstract(self) -> Dict:
+        return abstract_params(self.param_specs(), jnp.dtype(self.cfg.param_dtype))
+
+    # ---- forward (training) ----
+
+    def forward(self, params: Dict, tokens: jax.Array,
+                extra: Optional[Dict] = None) -> Tuple[jax.Array, jax.Array]:
+        """tokens: (B, S) -> (logits (B,S,V) fp32, aux loss scalar)."""
+        cfg, ctx = self.cfg, self.ctx
+        extra = extra or {}
+        dt = cfg.activation_dtype
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        # sequence parallelism: the residual stream (and therefore the
+        # per-layer activation stacks the scan saves for backward) shards
+        # over the model axis between layers; GSPMD inserts the all-gather
+        # at each layer entry / reduce-scatter at exit (Megatron SP).
+        seq_ax = ("model" if tokens.shape[1] % max(ctx.tp_size, 1) == 0
+                  and ctx.mesh is not None else None)
+        x = ctx.constrain(x, ctx.dp_axes, seq_ax, None)
+
+        enc_out = None
+        if cfg.family == "audio":
+            enc_out = self._encode(params, extra["enc_frames"].astype(dt))
+        elif cfg.family == "vlm":
+            enc_out = extra["image_embeds"].astype(dt)
+
+        def group_fwd(gp, h):
+            return self._group_apply(gp, h, enc_out)
+
+        if cfg.remat:
+            group_fwd = jax.checkpoint(
+                group_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(carry, gp):
+            h, aux = carry
+            h, a = group_fwd(gp, h)
+            h = ctx.constrain(h, ctx.dp_axes, seq_ax, None)
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["groups"])
+        if "tail" in params:
+            def tail_body(carry, gp):
+                h, aux = carry
+                h = _apply_rnn_sublayer(gp, h, cfg, ctx)
+                return (h, aux), None
+
+            (x, aux), _ = jax.lax.scan(tail_body, (x, aux), params["tail"])
+
+        x = blocks.norm_apply(params["final_norm"], x, cfg)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), aux
+
+    def _encode(self, params, frames):
+        cfg, ctx = self.cfg, self.ctx
+
+        def body(h, gp):
+            n = blocks.norm_apply(gp["ln1"], h, cfg)
+            h = h + blocks.attention_apply(gp["attn"], n, cfg, ctx, causal=False)
+            n = blocks.norm_apply(gp["ln2"], h, cfg)
+            h = h + blocks.mlp_apply(gp["mlp"], n, cfg)
+            return h, None
+
+        h, _ = jax.lax.scan(body, frames, params["enc_groups"])
+        return blocks.norm_apply(params["enc_norm"], h, cfg)
+
+    def _group_apply(self, gp, x, enc_out):
+        cfg, ctx = self.cfg, self.ctx
+        fam = cfg.family
+        zero = jnp.zeros((), jnp.float32)
+        if fam in ("dense", "moe"):
+            return _dense_group_apply(gp, x, cfg, ctx)
+        if fam == "ssm":
+            h = _gather_seq(ctx, blocks.norm_apply(gp["ln"], x, cfg))
+            return x + blocks.mamba_apply(gp["mamba"], h, cfg, ctx), zero
+        if fam == "hybrid":
+            for sub in gp["rnn"]:
+                x = _apply_rnn_sublayer(sub, x, cfg, ctx)
+            h = _gather_seq(ctx, blocks.norm_apply(gp["aln1"], x, cfg))
+            x = x + blocks.attention_apply(gp["attn"], h, cfg, ctx,
+                                           window=cfg.local_window)
+            h = _gather_seq(ctx, blocks.norm_apply(gp["aln2"], x, cfg))
+            return x + blocks.mlp_apply(gp["amlp"], h, cfg), zero
+        if fam == "audio":
+            return _apply_xdec_layer(gp, x, enc_out, cfg, ctx), zero
+        if fam == "vlm":
+            x = _apply_xdec_layer(gp["cross"], x, enc_out, cfg, ctx)
+            for sub in gp["self"]:
+                x, _ = _dense_group_apply(sub, x, cfg, ctx)
+            return x, zero
+        raise ValueError(fam)
+
+    # ---- loss ----
+
+    def loss(self, params, batch: Dict, extra: Optional[Dict] = None):
+        logits, aux = self.forward(params, batch["tokens"], extra)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # ---- serving ----
+
+    def init_cache(self, batch: int, cache_len: int,
+                   extra_len: int = 0) -> Dict:
+        """extra_len: cross-attention source length (encoder frames / image
+        tokens) for the audio/vlm families."""
+        cfg, ctx = self.cfg, self.ctx
+        dt = cfg.activation_dtype
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+        def kv_cache(length):
+            return {"k": jnp.zeros((batch, length, kv, hd), dt),
+                    "v": jnp.zeros((batch, length, kv, hd), dt)}
+
+        def stacked(tree, n):
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                                tree)
+
+        fam = cfg.family
+        attn_len = min(cache_len, cfg.sliding_window or cache_len)
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if fam in ("dense", "moe"):
+            cache["groups"] = stacked(kv_cache(attn_len), cfg.n_layers)
+        elif fam == "ssm":
+            cache["groups"] = stacked(blocks.mamba_init_cache(cfg, batch, dt),
+                                      cfg.n_layers)
+        elif fam == "hybrid":
+            gsz = cfg.pattern_rnn + 1
+            n_full, rem = divmod(cfg.n_layers, gsz)
+            g = {"rnn": [blocks.rglru_init_cache(cfg, batch, dt)
+                         for _ in range(cfg.pattern_rnn)],
+                 "attn": kv_cache(min(cache_len, cfg.local_window))}
+            cache["groups"] = stacked(g, n_full)
+            if rem:
+                cache["tail"] = stacked(blocks.rglru_init_cache(cfg, batch, dt),
+                                        rem)
+        elif fam == "audio":
+            cache["groups"] = stacked(
+                {"self": kv_cache(attn_len),
+                 "cross": kv_cache(extra_len)},
+                cfg.n_layers)
+        elif fam == "vlm":
+            n_groups = cfg.n_layers // cfg.cross_attn_every
+            g = {"cross": kv_cache(extra_len),
+                 "xself": kv_cache(attn_len),
+                 "self": [kv_cache(attn_len)
+                          for _ in range(cfg.cross_attn_every - 1)]}
+            cache["groups"] = stacked(g, n_groups)
+        return cache
+
+    def prefill(self, params, tokens, extra=None,
+                cache_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+        """Full-sequence forward that also returns the serving cache."""
+        cfg, ctx = self.cfg, self.ctx
+        extra = extra or {}
+        dt = cfg.activation_dtype
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        x = ctx.constrain(x, ctx.dp_axes, None, None)
+
+        enc_out = None
+        if cfg.family == "audio":
+            enc_out = self._encode(params, extra["enc_frames"].astype(dt))
+        elif cfg.family == "vlm":
+            enc_out = extra["image_embeds"].astype(dt)
+
+        def body(h, gp):
+            h, cache = self._group_prefill(gp, h, enc_out, cache_len)
+            return h, cache
+
+        x, caches = jax.lax.scan(body, x, params["groups"])
+        cache: Dict[str, Any] = {"groups": caches,
+                                 "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+        if "tail" in params:
+            def tail_body(h, gp):
+                h, c = _prefill_rnn_sublayer(gp, h, cfg, ctx)
+                return h, c
+
+            x, tail_caches = jax.lax.scan(tail_body, x, params["tail"])
+            cache["tail"] = tail_caches
+
+        x = blocks.norm_apply(params["final_norm"], x, cfg)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), cache
+
+    def _group_prefill(self, gp, x, enc_out, cache_len=None):
+        cfg, ctx = self.cfg, self.ctx
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return _dense_group_prefill(gp, x, cfg, ctx, cache_len)
+        if fam == "ssm":
+            h = blocks.norm_apply(gp["ln"], x, cfg)
+            y, cache = _mamba_prefill(gp["mamba"], h, cfg, ctx)
+            return x + y, cache
+        if fam == "hybrid":
+            caches = {"rnn": []}
+            for sub in gp["rnn"]:
+                x, c = _prefill_rnn_sublayer(sub, x, cfg, ctx)
+                caches["rnn"].append(c)
+            h = blocks.norm_apply(gp["aln1"], x, cfg)
+            y, c = blocks.attention_prefill(gp["attn"], h, cfg, ctx,
+                                            window=cfg.local_window)
+            caches["attn"] = c
+            x = x + y
+            h = blocks.norm_apply(gp["aln2"], x, cfg)
+            return x + blocks.mlp_apply(gp["amlp"], h, cfg), caches
+        if fam == "audio":
+            return _prefill_xdec_layer(gp, x, enc_out, cfg, ctx, cache_len)
+        if fam == "vlm":
+            x, xc = _prefill_xdec_layer(gp["cross"], x, enc_out, cfg, ctx,
+                                        cache_len)
+            selfs = []
+            for sub in gp["self"]:
+                x, c = _dense_group_prefill(sub, x, cfg, ctx, cache_len)
+                selfs.append(c)
+            return x, {"cross": xc["cross"], "xself": xc["self"], "self": selfs}
+        raise ValueError(fam)
+
+    def decode(self, params, cache, tokens) -> Tuple[jax.Array, Dict]:
+        """One-token step.  tokens: (B, 1)."""
+        cfg, ctx = self.cfg, self.ctx
+        dt = cfg.activation_dtype
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+        def body(h, xs):
+            gp, cache_g = xs
+            h, new_c = self._group_decode(gp, h, cache_g, pos)
+            return h, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (params["groups"],
+                                               cache["groups"]))
+        new_cache = {"groups": new_caches, "pos": pos + 1}
+        if "tail" in params:
+            def tail_body(h, xs):
+                gp, c = xs
+                h, nc = _decode_rnn_sublayer(gp, h, c, cfg, ctx)
+                return h, nc
+
+            x, tail_c = jax.lax.scan(tail_body, x,
+                                     (params["tail"], cache["tail"]))
+            new_cache["tail"] = tail_c
+
+        x = blocks.norm_apply(params["final_norm"], x, cfg)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return logits.astype(jnp.float32), new_cache
+
+    def _group_decode(self, gp, x, cache_g, pos):
+        cfg, ctx = self.cfg, self.ctx
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return _dense_group_decode(gp, x, cache_g, pos, cfg, ctx)
+        if fam == "ssm":
+            h = blocks.norm_apply(gp["ln"], x, cfg)
+            y, c = blocks.mamba_decode(gp["mamba"], h, cache_g, cfg, ctx)
+            return x + y, c
+        if fam == "hybrid":
+            new_c = {"rnn": []}
+            for sub, c in zip(gp["rnn"], cache_g["rnn"]):
+                x, nc = _decode_rnn_sublayer(sub, x, c, cfg, ctx)
+                new_c["rnn"].append(nc)
+            h = blocks.norm_apply(gp["aln1"], x, cfg)
+            y, ac = blocks.attention_decode(gp["attn"], h, cache_g["attn"],
+                                            pos, cfg, ctx,
+                                            window=cfg.local_window)
+            new_c["attn"] = ac
+            x = x + y
+            h = blocks.norm_apply(gp["aln2"], x, cfg)
+            return x + blocks.mlp_apply(gp["amlp"], h, cfg), new_c
+        if fam == "audio":
+            return _decode_xdec_layer(gp, x, cache_g, pos, cfg, ctx)
+        if fam == "vlm":
+            x, nc_x = _decode_xdec_layer(
+                gp["cross"], x,
+                {"self": cache_g["xself"], "cross": cache_g["cross"]},
+                pos, cfg, ctx)
+            new_c = {"cross": nc_x["cross"], "xself": nc_x["self"], "self": []}
+            for sub, c in zip(gp["self"], cache_g["self"]):
+                x, nc = _dense_group_decode(sub, x, c, pos, cfg, ctx)
+                new_c["self"].append(nc)
+            return x, new_c
+        raise ValueError(fam)
+
+
+# ------------------------------------------------------------ sub-layer fns
+
+
+def _apply_rnn_sublayer(gp, x, cfg, ctx):
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln1"], x, cfg))
+    x = x + blocks.rglru_apply(gp["mix"], h, cfg, ctx)
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln2"], x, cfg))
+    return x + blocks.mlp_apply(gp["mlp"], h, cfg)
+
+
+def _prefill_rnn_sublayer(gp, x, cfg, ctx):
+    from . import layers as L
+    b, w = x.shape[0], cfg.lru_width_
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    xz = h @ gp["mix"]["wx"].astype(x.dtype)
+    gate = h @ gp["mix"]["wy"].astype(x.dtype)
+    xc, conv_state = L.causal_conv1d(xz, gp["mix"]["conv_w"].astype(x.dtype))
+    xc = xc + gp["mix"]["conv_b"].astype(x.dtype)
+    a, bb = blocks._rglru_gates(gp["mix"], xc)
+    hs, h_last = L.chunked_linear_recurrence(
+        a, bb, jnp.zeros((b, w), jnp.float32), cfg.scan_chunk)
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    x = x + y @ gp["mix"]["out_proj"].astype(x.dtype)
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    x = x + blocks.mlp_apply(gp["mlp"], h, cfg)
+    return x, {"conv": conv_state, "h": h_last}
+
+
+def _decode_rnn_sublayer(gp, x, cache, cfg, ctx):
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    y, nc = blocks.rglru_decode(gp["mix"], h, cache, cfg, ctx)
+    x = x + y
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    return x + blocks.mlp_apply(gp["mlp"], h, cfg), nc
+
+
+def _mamba_prefill(p, x, cfg, ctx):
+    from . import layers as L
+    b = x.shape[0]
+    xz = x @ p["wx"].astype(x.dtype)
+    z = x @ p["wz"].astype(x.dtype)
+    xc, conv_full = L.causal_conv1d(xz, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    # recompute core but also capture final state
+    n, r = cfg.ssm_state, cfg.dt_rank_
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt_r, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt[..., None] * a)
+    bx = (dt[..., None] * b_mat[:, :, None, :].astype(jnp.float32)
+          * xc[..., None].astype(jnp.float32))
+    hs, h_last = L.chunked_linear_recurrence(a_bar, bx, h0, cfg.scan_chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_mat.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    cache = {"conv": conv_full[:, -(cfg.d_conv - 1):, :], "h": h_last}
+    return out, cache
+
+
+def _prefill_xdec_layer(gp, x, enc_out, cfg, ctx, cache_len=None):
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    y, self_c = blocks.attention_prefill(gp["attn"], h, cfg, ctx,
+                                         window=cfg.sliding_window,
+                                         cache_len=cache_len)
+    x = x + y
+    h = blocks.norm_apply(gp["lnx"], x, cfg)
+    x = x + blocks.attention_apply(gp["xattn"], h, cfg, ctx, kv_src=enc_out)
+    # cross cache: K/V over encoder output, computed once
+    xk = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    gp["xattn"]["wk"].astype(x.dtype))
+    xv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                    gp["xattn"]["wv"].astype(x.dtype))
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    x = x + blocks.mlp_apply(gp["mlp"], h, cfg)
+    return x, {"self": self_c, "cross": {"k": xk, "v": xv}}
+
+
+def _apply_xdec_layer(gp, x, enc_out, cfg, ctx):
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln1"], x, cfg))
+    x = x + blocks.attention_apply(gp["attn"], h, cfg, ctx,
+                                   window=cfg.sliding_window)
+    h = _gather_seq(ctx, blocks.norm_apply(gp["lnx"], x, cfg))
+    x = x + blocks.attention_apply(gp["xattn"], h, cfg, ctx, kv_src=enc_out)
+    h = _gather_seq(ctx, blocks.norm_apply(gp["ln2"], x, cfg))
+    return x + blocks.mlp_apply(gp["mlp"], h, cfg)
+
+
+def _decode_xdec_layer(gp, x, cache, pos, cfg, ctx):
+    h = blocks.norm_apply(gp["ln1"], x, cfg)
+    y, self_c = blocks.attention_decode(gp["attn"], h, cache["self"], pos,
+                                        cfg, ctx, window=cfg.sliding_window)
+    x = x + y
+    h = blocks.norm_apply(gp["lnx"], x, cfg)
+    y, _ = blocks.attention_decode(gp["xattn"], h, cache["cross"], pos,
+                                   cfg, ctx, cross=True)
+    x = x + y
+    h = blocks.norm_apply(gp["ln2"], x, cfg)
+    x = x + blocks.mlp_apply(gp["mlp"], h, cfg)
+    return x, {"self": self_c, "cross": cache["cross"]}

@@ -1,0 +1,3 @@
+from .adamw import adamw  # noqa: F401
+from .adafactor import adafactor  # noqa: F401
+from .gauss_newton import damped_gauss_newton_head  # noqa: F401

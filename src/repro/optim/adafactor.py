@@ -1,0 +1,68 @@
+"""Adafactor (factored second moment, no first moment) — the optimizer used
+for the 1T-param kimi-k2 config, where full AdamW states would not fit the
+512-chip HBM budget (see EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adafactor"]
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any    # row factors (or full v for rank<2 leaves)
+    vc: Any    # col factors (or None sentinel zeros)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr0(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vc0(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr0, params),
+                              jax.tree.map(vc0, params))
+
+    def update(grads, state: AdafactorState, params) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / vr.mean(axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(denom + eps)
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(vr + eps)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        is_t = lambda x: isinstance(x, tuple)
+        newp = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        vr = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        vc = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+        return newp, AdafactorState(step, vr, vc)
+
+    return init, update

@@ -1,0 +1,2 @@
+from .steps import make_train_step, make_serve_steps  # noqa: F401
+from .loop import TrainLoop, TrainLoopConfig  # noqa: F401

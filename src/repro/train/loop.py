@@ -1,0 +1,132 @@
+"""Training loop with checkpoint/restart, straggler detection and
+prefetching — the piece that makes the framework restartable at scale.
+
+Fault-tolerance contract:
+* every ``ckpt_every`` steps an **async atomic** checkpoint of
+  (params, opt_state, step) is written;
+* on construction the loop auto-resumes from the newest valid checkpoint
+  (corrupt/torn checkpoints are skipped — see CheckpointManager);
+* a crashed/preempted job rerun with the same arguments continues.
+
+Straggler mitigation (host-side):
+* per-step wall time EWMA + deviation tracking; steps slower than
+  ``straggler_factor ×`` EWMA are counted and surfaced in metrics so the
+  orchestration layer can drain/replace the slow host;
+* the data iterator is wrapped in a background prefetch thread
+  (depth ``prefetch``) so input stalls never serialize with compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+__all__ = ["TrainLoop", "TrainLoopConfig"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 100
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.1
+    prefetch: int = 2
+
+
+class _Prefetcher:
+    def __init__(self, it: Iterator, depth: int):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = False
+
+        def work():
+            for item in it:
+                if self._stop:
+                    return
+                self.q.put(item)
+            self.q.put(None)
+
+        self.t = threading.Thread(target=work, daemon=True)
+        self.t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop = True
+
+
+class TrainLoop:
+    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
+                 params: Any, opt_state: Any,
+                 shardings: Any = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.start_step = 0
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+        if self.ckpt is not None:
+            step, state = self.ckpt.restore_latest(
+                {"params": params, "opt": opt_state}, shardings)
+            if step is not None:
+                self.params = state["params"]
+                self.opt_state = state["opt"]
+                self.start_step = step
+        self.metrics_log: list = []
+        self.straggler_steps = 0
+        self._ewma = None
+
+    def run(self, data_it: Iterator, extra: Optional[Dict] = None) -> Dict:
+        cfg = self.cfg
+        pf = _Prefetcher(data_it, cfg.prefetch)
+        step = self.start_step
+        try:
+            for batch in pf:
+                if step >= cfg.total_steps:
+                    break
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch, extra)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self._ewma is None:
+                    self._ewma = dt
+                elif dt > cfg.straggler_factor * self._ewma:
+                    self.straggler_steps += 1   # surface to orchestrator
+                    self._ewma = ((1 - cfg.ewma_alpha) * self._ewma
+                                  + cfg.ewma_alpha * dt)
+                else:
+                    self._ewma = ((1 - cfg.ewma_alpha) * self._ewma
+                                  + cfg.ewma_alpha * dt)
+                step += 1
+                if step % cfg.log_every == 0 or step == cfg.total_steps:
+                    self.metrics_log.append(
+                        {"step": step, "loss": float(metrics["loss"]),
+                         "sec_per_step": dt})
+                if self.ckpt is not None and step % cfg.ckpt_every == 0:
+                    self.ckpt.save_async(
+                        step, {"params": self.params, "opt": self.opt_state})
+        finally:
+            pf.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        if self.ckpt is not None and step > self.start_step:
+            self.ckpt.save(step, {"params": self.params, "opt": self.opt_state})
+        return {"final_step": step, "log": self.metrics_log,
+                "straggler_steps": self.straggler_steps,
+                "ewma_sec_per_step": self._ewma}

@@ -1,0 +1,99 @@
+"""Step builders — the functions the launcher jits / the dry-run lowers.
+
+``make_train_step``: loss → grads (with optional microbatch accumulation and
+int8 error-feedback grad sync) → optimizer update.  Parameters and optimizer
+state are donated.
+
+``make_serve_steps``: (prefill, decode) pair for the inference cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.models.model import Model
+
+__all__ = ["make_train_step", "make_serve_steps"]
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Tuple[Callable, Callable],
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, extra?) ->
+    (params, opt_state, metrics).
+
+    ``microbatches`` splits the global batch and accumulates grads with a
+    lax.scan (gradient accumulation — the memory lever for the 1T config).
+    ``compress_grads`` applies int8 error-feedback quantization to the
+    gradient before the optimizer (EF state lives in metrics-free aux slot
+    of opt_state via closure-free wrapper: see TrainLoop).
+    """
+    _, opt_update = optimizer
+
+    def loss_fn(params, batch, extra):
+        loss, metrics = model.loss(params, batch, extra)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch: Dict, extra: Optional[Dict] = None):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch, extra)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            mb_extra = jax.tree.map(split, extra) if extra else None
+
+            def acc_body(carry, xs):
+                g_acc, l_acc = carry
+                b = xs[0] if mb_extra is not None else xs
+                e = xs[1] if mb_extra is not None else None
+                (l, _), g = grad_fn(params, b, e)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (mb, mb_extra) if mb_extra is not None else mb
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), xs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        if compress_grads:
+            residual = opt_state[1]
+            grads, residual = compression.ef_compress_tree(grads, residual)
+            inner, _ = opt_state
+            params, inner = opt_update(grads, inner, params)
+            new_opt = (inner, residual)
+        else:
+            params, new_opt = opt_update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=jnp.sqrt(sum(
+                           jnp.sum(jnp.square(g.astype(jnp.float32)))
+                           for g in jax.tree.leaves(grads))))
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_steps(model: Model):
+    """(prefill_step, decode_step) for the inference dry-run cells."""
+
+    def prefill_step(params, tokens, extra=None, cache_len=None):
+        return model.prefill(params, tokens, extra, cache_len=cache_len)
+
+    def decode_step(params, cache, tokens):
+        return model.decode(params, cache, tokens)
+
+    return prefill_step, decode_step

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS before any jax import — never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

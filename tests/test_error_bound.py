@@ -1,0 +1,57 @@
+"""Theorem 4.4/4.7 sanity: the analytic bound dominates the observed error
+on random small SPD matrices (exact Fréchet machinery, d ≤ 12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bound, picholesky
+
+
+def _spd(d, seed):
+    x = np.random.RandomState(seed).randn(3 * d, d)
+    return jnp.asarray(x.T @ x / 3.0 + np.eye(d))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_taylor_factor_converges_cubically(seed):
+    d = 8
+    a = _spd(d, seed)
+    lam_c = jnp.asarray(0.5)
+    errs = []
+    gammas = [0.2, 0.1, 0.05]
+    for g in gammas:
+        lam = lam_c + g
+        p = bound.taylor_factor(a, lam, lam_c)
+        l = jnp.linalg.cholesky(a + lam * jnp.eye(d))
+        errs.append(float(jnp.linalg.norm(p - l)))
+    # halving γ should shrink error ≈ 8×; allow slack
+    assert errs[1] < errs[0] / 4
+    assert errs[2] < errs[1] / 4
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_thm47_bound_dominates_observed_error(seed):
+    d = 8
+    a = _spd(d, seed)
+    lam_c, w, gamma = 0.6, 0.15, 0.15
+    sample = jnp.linspace(lam_c - w, lam_c + w, 5)
+    model = picholesky.fit(a, sample, 2, block=4)
+    rhs = float(bound.picholesky_bound(a, sample, lam_c, gamma))
+    big_d = d * (d + 1) / 2.0
+    worst = 0.0
+    for lam in np.linspace(lam_c - gamma, lam_c + gamma, 9):
+        l_i = model.eval_factor(jnp.asarray(lam))
+        l_e = jnp.linalg.cholesky(a + lam * jnp.eye(d))
+        worst = max(worst, float(jnp.linalg.norm(l_i - l_e)) / np.sqrt(big_d))
+    assert worst <= rhs * 1.01, (worst, rhs)
+
+
+def test_remainder_r_positive_and_monotone_interval():
+    d = 6
+    a = _spd(d, 3)
+    r_small = float(bound.remainder_r(a, 0.5, 0.6))
+    r_big = float(bound.remainder_r(a, 0.1, 0.6))
+    assert r_small > 0
+    # larger interval -> max over superset -> at least as large
+    assert r_big >= r_small - 1e-12

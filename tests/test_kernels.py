@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+All Pallas kernels run in interpret mode on CPU (the TPU lowering is the
+same kernel body with real BlockSpecs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import picholesky
+from repro.kernels import ref
+from repro.kernels.chol_blocked import cholesky_blocked
+from repro.kernels.poly_interp import interp_factors
+from repro.kernels.tri_pack import pack_tril, unpack_tril
+from repro.kernels.trsm import solve_lower_blocked, solve_factor_sweep
+
+
+def _spd(h, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2 * h, h), jnp.float32)
+    a = x.T @ x + h * jnp.eye(h)
+    return a.astype(dtype)
+
+
+@pytest.mark.parametrize("h", [16, 24, 37, 64])
+@pytest.mark.parametrize("block", [8, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_tri_pack_kernel(h, block, dtype):
+    m = jax.random.normal(jax.random.PRNGKey(h), (h, h), jnp.float32).astype(dtype)
+    v = pack_tril(m, block)
+    np.testing.assert_allclose(v, ref.pack_tril(m, block), rtol=1e-6)
+    back = unpack_tril(v, h, block)
+    np.testing.assert_allclose(back, jnp.tril(m), rtol=1e-6)
+
+
+@pytest.mark.parametrize("h,block", [(16, 8), (37, 8), (64, 16), (100, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_cholesky_kernel(h, block, dtype):
+    a = _spd(h, dtype)
+    l = cholesky_blocked(a, block=block)
+    l_ref = ref.cholesky(a)
+    tol = 5e-5 if dtype == jnp.float32 else 1e-10
+    err = float(jnp.max(jnp.abs(l - l_ref)) / jnp.max(jnp.abs(l_ref)))
+    assert err < tol
+
+
+@given(h=st.sampled_from([16, 33, 48]), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_cholesky_kernel_property(h, seed):
+    """L Lᵀ must reconstruct A (system invariant, any SPD input)."""
+    a = _spd(h, jnp.float64, seed)
+    l = cholesky_blocked(a, block=8)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("h,block,q", [(32, 8, 1), (37, 8, 5), (64, 16, 31)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_trsm_kernel(h, block, q, dtype):
+    a = _spd(h, dtype)
+    l = jnp.linalg.cholesky(a)
+    g = jax.random.normal(jax.random.PRNGKey(1), (h, q), jnp.float32).astype(dtype)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-9
+    w = solve_lower_blocked(l, g, block)
+    np.testing.assert_allclose(w, ref.solve_lower(l, g), rtol=tol, atol=tol)
+    t = solve_lower_blocked(l, w, block, transpose=True)
+    np.testing.assert_allclose(t, ref.solve_lower(l, w, transpose=True),
+                               rtol=tol, atol=tol)
+
+
+def test_solve_factor_sweep_kernel():
+    h, q = 48, 7
+    a = _spd(h, jnp.float32)
+    lams = jnp.logspace(-2, 0, q)
+    ls = jax.vmap(lambda lam: jnp.linalg.cholesky(a + lam * jnp.eye(h)))(lams)
+    g = jax.random.normal(jax.random.PRNGKey(3), (h,), jnp.float32)
+    thetas = solve_factor_sweep(ls, g, block=16)
+    np.testing.assert_allclose(thetas, ref.solve_factor_sweep(ls, g),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("h,block,degree", [(32, 8, 2), (48, 16, 3)])
+def test_poly_interp_kernel(h, block, degree):
+    a = _spd(h, jnp.float32)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, degree + 3)
+    model = picholesky.fit(a, sample, degree, block=block)
+    lams = jnp.logspace(-2, 0, 9)
+    out = interp_factors(model.theta, lams, h, block, center=model.center)
+    expect = ref.interp_factors(model.theta, lams, h, block)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_end_to_end_kernel_pipeline():
+    """chol kernel -> pack kernel -> fit -> fused interp -> trsm solve,
+    matching the all-jnp pipeline."""
+    h, block = 64, 16
+    a = _spd(h, jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(9), (h,), jnp.float32)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, 5)
+    eye = jnp.eye(h)
+    factors = jax.vmap(lambda lam: cholesky_blocked(a + lam * eye, block=block)
+                       )(sample)
+    model = picholesky.fit(a, sample, 2, block=block, factors=factors)
+    lams = jnp.logspace(-2, 0, 5)
+    ls = interp_factors(model.theta, lams, h, block, center=model.center)
+    thetas = solve_factor_sweep(ls, g, block=block)
+    expect = jax.vmap(
+        lambda lam: ref.solve_lower(
+            jnp.linalg.cholesky(a + lam * eye),
+            ref.solve_lower(jnp.linalg.cholesky(a + lam * eye), g),
+            transpose=True))(lams)
+    np.testing.assert_allclose(thetas, expect, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [(2, 32, 16, 4, 8, 8), (1, 64, 32, 8, 16, 16)])
+def test_ssm_scan_kernel(shape):
+    from repro.kernels.ssm_scan import ssm_scan
+    b, s, di, n, chunk, dblk = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    xc = jax.random.normal(ks[0], (b, s, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    bm = jax.random.normal(ks[2], (b, s, n))
+    cm = jax.random.normal(ks[3], (b, s, n))
+    a = -jnp.exp(jax.random.normal(ks[4], (di, n)) * 0.3)
+    d = jax.random.normal(ks[5], (di,))
+    y_k, h_k = ssm_scan(xc, dt, bm, cm, a, d, chunk=chunk, di_block=dblk)
+    y_r, h_r = ref.ssm_scan(xc, dt, bm, cm, a, d)
+    np.testing.assert_allclose(y_k, y_r, atol=1e-4)
+    np.testing.assert_allclose(h_k, h_r, atol=1e-4)

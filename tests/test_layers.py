@@ -1,0 +1,141 @@
+"""Custom-vjp layer primitives vs naive AD oracles (flash attention,
+linear recurrence, rms_norm) — values AND gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers
+
+
+# ------------------------------------------------------------ flash attn
+
+
+def _dense_attn(q, k, v, causal, window, n_rep):
+    kk, vv = layers._repeat_kv(k, n_rep), layers._repeat_kv(v, n_rep)
+    s_len = q.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bqhk", q, kk) / np.sqrt(q.shape[-1])
+    qp = jnp.arange(s_len)[:, None]
+    kp = jnp.arange(s_len)[None, :]
+    mask = jnp.ones((s_len, s_len), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+    return jnp.einsum("bqhk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)])
+def test_flash_attention_matches_dense(causal, window):
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, hd = 2, 70, 4, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+
+    out = layers.flash_attention(q, k, v, causal=causal, window=window,
+                                 chunk=32)
+    ref = _dense_attn(q, k, v, causal, window, h // kv)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    f = lambda *a: layers.flash_attention(*a, causal=causal, window=window,
+                                          chunk=32).sum()
+    g = lambda *a: _dense_attn(*a, causal, window, h // kv).sum()
+    gf = jax.grad(f, (0, 1, 2))(q, k, v)
+    gg = jax.grad(g, (0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gg):
+        np.testing.assert_allclose(a, b_, atol=1e-4)
+
+
+@given(s=st.sampled_from([17, 33, 64]), chunk=st.sampled_from([8, 16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_chunk_invariance(s, chunk):
+    """Output must not depend on the chunking (system invariant)."""
+    key = jax.random.PRNGKey(s)
+    q = jax.random.normal(key, (1, s, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, 2, 8))
+    a = layers.flash_attention(q, k, v, causal=True, chunk=chunk)
+    b = layers.flash_attention(q, k, v, causal=True, chunk=s)
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+# ------------------------------------------------------------ recurrence
+
+
+def _naive_recurrence(a, b, h0):
+    def step(h, ab):
+        h = ab[0] * h + ab[1]
+        return h, h
+    h_last, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                         jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+@pytest.mark.parametrize("s,chunk", [(24, 8), (30, 8), (16, 16)])
+def test_recurrence_matches_naive(s, chunk):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (2, s, 5), minval=0.3, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, s, 5))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (2, 5))
+    hs, hl = layers.chunked_linear_recurrence(a, b, h0, chunk)
+    hs_n, hl_n = _naive_recurrence(a, b, h0)
+    np.testing.assert_allclose(hs, hs_n, atol=1e-4)
+    np.testing.assert_allclose(hl, hl_n, atol=1e-4)
+
+    def f(a, b, h0):
+        hs, hl = layers.chunked_linear_recurrence(a, b, h0, chunk)
+        return (hs ** 2).sum() + (hl * 3).sum()
+
+    def g(a, b, h0):
+        hs, hl = _naive_recurrence(a, b, h0)
+        return (hs ** 2).sum() + (hl * 3).sum()
+
+    gf = jax.grad(f, (0, 1, 2))(a, b, h0)
+    gg = jax.grad(g, (0, 1, 2))(a, b, h0)
+    for x, y in zip(gf, gg):
+        np.testing.assert_allclose(x, y, atol=1e-3)
+
+
+# ------------------------------------------------------------ rms_norm
+
+
+def test_rms_norm_grads_match_naive():
+    def naive(x, s, eps=1e-6):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        return (xf * jax.lax.rsqrt(var + eps)
+                * (1 + s.astype(jnp.float32))).astype(x.dtype)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 32), jnp.float32)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (32,)) * 0.1
+    np.testing.assert_allclose(layers.rms_norm(x, s), naive(x, s), atol=1e-5)
+    g1 = jax.grad(lambda x, s: (layers.rms_norm(x, s) ** 2).sum(), (0, 1))(x, s)
+    g2 = jax.grad(lambda x, s: (naive(x, s) ** 2).sum(), (0, 1))(x, s)
+    np.testing.assert_allclose(g1[0], g2[0], atol=1e-4)
+    np.testing.assert_allclose(g1[1], g2[1], atol=1e-4)
+
+
+def test_rms_norm_cotangent_dtype_preserved():
+    x = jnp.ones((2, 16), jnp.bfloat16)
+    s = jnp.zeros((16,), jnp.bfloat16)
+    dx = jax.grad(lambda x: layers.rms_norm(x, s).astype(jnp.float32).sum())(x)
+    assert dx.dtype == jnp.bfloat16
+
+
+# ------------------------------------------------------------ conv
+
+
+def test_causal_conv_streaming_matches_full():
+    """Processing a sequence in two halves with carried state == one pass."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 20, 6))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (6, 4))
+    full, _ = layers.causal_conv1d(x, w)
+    y1, st = layers.causal_conv1d(x[:, :9], w)
+    y2, _ = layers.causal_conv1d(x[:, 9:], w, st)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), full, atol=1e-5)

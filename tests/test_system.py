@@ -1,0 +1,78 @@
+"""End-to-end behaviour: the paper's claim on synthetic data (piCholesky CV
+selects the exact-CV λ at ~1/8 the factorization count), kernel-backed CV,
+and the full LM-probe path (DESIGN.md §4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import cv, picholesky
+from repro.data import make_regression_dataset, random_polynomial_features
+from repro.models.model import Model
+
+
+def _dataset():
+    return make_regression_dataset(jax.random.PRNGKey(7), 360, 192,
+                                   dtype=jnp.float64)
+
+
+def test_picholesky_cv_end_to_end():
+    x, y = _dataset()
+    folds = cv.make_folds(x, y, 5)
+    lams = jnp.logspace(-3, 2, 31)
+    r_exact = cv.cv_exact_cholesky(folds, lams)
+    r_pi = cv.cv_picholesky(folds, lams, g=4, block=32)
+
+    # selection parity (paper Table 4)
+    i_e, i_p = int(np.argmin(r_exact.errors)), int(np.argmin(r_pi.errors))
+    assert abs(i_e - i_p) <= 1
+    # cost: 20 vs 155 factorizations (paper's ~4-8x speedup driver)
+    assert r_pi.n_exact_chol * 7 <= r_exact.n_exact_chol
+    # hold-out error at the selected λ matches exact to <1%
+    assert abs(r_exact.errors[i_p] - r_exact.best_error) < 0.01 * r_exact.best_error
+    # error curves agree near the optimum (±2 grid steps)
+    lo, hi = max(i_e - 2, 0), min(i_e + 3, len(lams))
+    np.testing.assert_allclose(r_pi.errors[lo:hi], r_exact.errors[lo:hi],
+                               rtol=0.05)
+
+
+def test_picholesky_cv_with_pallas_kernels():
+    """Same CV driven by the Pallas blocked-Cholesky kernel."""
+    from repro.kernels.chol_blocked import cholesky_blocked
+    x, y = make_regression_dataset(jax.random.PRNGKey(3), 220, 96,
+                                   dtype=jnp.float64)
+    folds = cv.make_folds(x, y, 4)
+    lams = jnp.logspace(-2, 1, 11)
+    chol = lambda a: cholesky_blocked(a, block=16)
+    r_k = cv.cv_picholesky(folds, lams, g=4, block=16, chol_fn=chol)
+    r_j = cv.cv_picholesky(folds, lams, g=4, block=16)
+    np.testing.assert_allclose(r_k.errors, r_j.errors, rtol=1e-6)
+
+
+def test_multilevel_cholesky_narrows_range():
+    x, y = _dataset()
+    folds = cv.make_folds(x, y, 5)
+    r_m = cv.cv_multilevel_cholesky(folds, c=0.0, s=1.5, s0=0.05)
+    lams = jnp.logspace(-3, 2, 31)
+    r_e = cv.cv_exact_cholesky(folds, lams)
+    # MChol converges to within half a decade of the exact optimum
+    assert abs(np.log10(r_m.best_lam) - np.log10(r_e.best_lam)) < 0.5
+
+
+def test_lm_probe_ridge_cv():
+    """Hidden states from a zoo model -> piCholesky-CV'd linear probe."""
+    cfg = configs.get("smollm-360m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                cfg.vocab_size)
+    logits, _ = jax.jit(m.forward)(params, tokens)
+    feats = logits.reshape(-1, cfg.vocab_size)[:, :64].astype(jnp.float64)
+    feats = jnp.concatenate([feats, jnp.ones((feats.shape[0], 1),
+                                             jnp.float64)], 1)
+    y = feats @ jax.random.normal(jax.random.PRNGKey(2), (65,), jnp.float64)
+    folds = cv.make_folds(feats, y, 4)
+    lams = jnp.logspace(-3, 1, 11)
+    r = cv.cv_picholesky(folds, lams, g=4, block=16)
+    assert np.isfinite(r.best_error)
+    assert r.n_exact_chol == 16
