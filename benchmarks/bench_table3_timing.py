@@ -1,14 +1,16 @@
-"""Table 3 / Fig. 6: wall time of the six CV algorithms per fold.
+"""Table 3 / Fig. 6: wall time of the six CV algorithms per fold — plus the
+engine-vs-host comparison the unified sweep exists for.
 
 On this container the absolute times are CPU seconds; the reproduction
-target is the RELATIVE ordering and the PIChol speedup over Chol
-(paper: ~3.8–4.3× at q=31, g=4)."""
+target is the RELATIVE ordering, the PIChol speedup over Chol
+(paper: ~3.8–4.3× at q=31, g=4), and the CVEngine speedup over the eager
+host drivers (one jitted compiled sweep vs op-by-op tracing per call)."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import cv
+from repro.core import cv, cv_host, engine
 
-from .common import SIZES, emit, ridge_problem, timeit
+from .common import SIZES, bench_pair, emit, ridge_problem, timeit
 
 
 def run():
@@ -42,5 +44,25 @@ def run():
             emit(f"table3_{name}_h{h}", t, f"seconds={t:.3f}")
         speedup = times["chol"] / times["pichol"]
         emit(f"table3_speedup_h{h}", 0.0, f"pichol_vs_chol={speedup:.2f}x")
+
+        # ---- engine vs host baseline: same math, one jitted sweep vs the
+        # eager per-call-traced drivers.  Engines are prebuilt so the
+        # comparison times the sweep, not tracing.
+        host = {
+            "chol": lambda: cv_host.host_cv_exact_cholesky(folds, lams),
+            "pichol": lambda: cv_host.host_cv_picholesky(folds, lams, g=4,
+                                                         block=64),
+        }
+        engines = {
+            "chol": engine.CVEngine("exact"),
+            "pichol": engine.CVEngine(engine.PiCholeskyStrategy(g=4,
+                                                                block=64)),
+        }
+        for name in host:
+            eng = engines[name]
+            pair = bench_pair(f"table3_{name}_h{h}", host[name],
+                              lambda: eng.run(folds, lams))
+            times[f"host_{name}"] = pair["host"]
+            times[f"engine_{name}"] = pair["engine"]
         out[h] = times
     return out

@@ -38,3 +38,16 @@ def ridge_problem(h: int, n: int | None = None, seed: int = 0):
     x, y = make_regression_dataset(jax.random.PRNGKey(seed), n, h,
                                    dtype=jnp.float64)
     return x, y
+
+
+def bench_pair(tag: str, host_fn: Callable, engine_fn: Callable,
+               repeats: int = 3, warmup: int = 1) -> dict:
+    """Time a host-loop driver against its CVEngine counterpart and emit
+    both rows plus the speedup line.  Returns {host, engine, speedup}."""
+    t_host = timeit(host_fn, repeats=repeats, warmup=warmup)
+    t_eng = timeit(engine_fn, repeats=repeats, warmup=warmup)
+    emit(f"{tag}_host", t_host, f"seconds={t_host:.3f}")
+    emit(f"{tag}_engine", t_eng, f"seconds={t_eng:.3f}")
+    emit(f"{tag}_engine_speedup", 0.0,
+         f"engine_vs_host={t_host / t_eng:.2f}x")
+    return {"host": t_host, "engine": t_eng, "speedup": t_host / t_eng}

@@ -1,8 +1,10 @@
 """End-to-end reproduction of the paper's experiment pipeline (§6) on
 synthetic polynomial-kernel features: all six algorithms, hold-out curves,
-selected λ, and factorization counts.
+selected λ, and factorization counts — then the same sweep through the
+unified CVEngine (one jitted batched computation, optionally sharded over
+all local devices with --mesh).
 
-    PYTHONPATH=src python examples/ridge_cv.py [--h 512] [--n 1500]
+    PYTHONPATH=src python examples/ridge_cv.py [--h 512] [--n 1500] [--mesh]
 """
 import argparse
 import time
@@ -14,7 +16,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import cv  # noqa: E402
+from repro.core import cv, engine  # noqa: E402
 from repro.data import make_regression_dataset  # noqa: E402
 
 
@@ -23,6 +25,8 @@ def main():
     ap.add_argument("--h", type=int, default=384)
     ap.add_argument("--n", type=int, default=1200)
     ap.add_argument("--folds", type=int, default=5)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the engine sweep over all local devices")
     args = ap.parse_args()
 
     x, y = make_regression_dataset(jax.random.PRNGKey(0), args.n, args.h,
@@ -47,6 +51,31 @@ def main():
     for name, fn in algos.items():
         t0 = time.perf_counter()
         r = fn()
+        dt = time.perf_counter() - t0
+        print(f"{name:8s} {dt:8.2f} {r.best_error:12.4f} "
+              f"{r.best_lam:11.4g} {r.n_exact_chol:6d}")
+
+    # ---- the same sweep through the unified engine: every strategy is one
+    # jitted batched computation; the second run hits compiled code.
+    mesh = "auto" if args.mesh else None
+    if args.mesh and len(jax.devices()) == 1:
+        print("\n--mesh: only one device visible; set e.g. "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+              "to shard on CPU")
+    print(f"\nCVEngine (backend=auto, mesh={mesh}, "
+          f"{len(jax.devices())} device(s)):")
+    strategies = {
+        "exact": engine.make_strategy("exact"),
+        "pichol": engine.PiCholeskyStrategy(g=4),
+        "warm": engine.PiCholeskyWarmstart(g_first=4, g_rest=2),
+        "svd": engine.SVDStrategy(mode="full"),
+        "pinrmse": engine.PinrmseStrategy(g=4),
+    }
+    for name, strat in strategies.items():
+        eng = engine.CVEngine(strat, mesh=mesh)
+        eng.run(folds, lams)                      # compile + warm
+        t0 = time.perf_counter()
+        r = eng.run(folds, lams)
         dt = time.perf_counter() - t0
         print(f"{name:8s} {dt:8.2f} {r.best_error:12.4f} "
               f"{r.best_lam:11.4g} {r.n_exact_chol:6d}")

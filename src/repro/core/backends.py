@@ -1,0 +1,149 @@
+"""Linear-algebra backend selection — the single ``backend=`` switch.
+
+Every piCholesky hot spot (factorize, triangular solve, pack/unpack,
+interpolant evaluation) has two implementations: the Pallas TPU kernels in
+:mod:`repro.kernels` and the ``jnp.linalg`` reference path.  This module
+packages each pair behind one object so callers (``solvers.py``,
+``picholesky.py``, the :class:`~repro.core.engine.CVEngine`) thread a single
+``backend=`` argument instead of per-function ``chol_fn`` plumbing.
+
+Resolution rules for :func:`resolve_backend`:
+
+* ``None`` / ``"auto"`` — Pallas kernels when the default jax backend is TPU
+  (compiled) and the plain ``jnp.linalg`` path elsewhere.  On CPU the Pallas
+  path would run in interpret mode, which is only useful for testing.
+* ``"pallas"`` — force the kernel path (interpret mode off-TPU).
+* ``"reference"`` / ``"ref"`` — force the ``jnp.linalg`` path.
+* an existing :class:`LinalgBackend` — returned unchanged.
+
+Kernel imports happen lazily inside the Pallas methods so importing
+``repro.core`` never drags in the Pallas toolchain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LinalgBackend", "ReferenceBackend", "PallasBackend",
+           "resolve_backend", "BackendLike"]
+
+
+class LinalgBackend:
+    """Interface shared by both backends (duck-typed, no ABC machinery)."""
+
+    name: str = "abstract"
+
+    def cholesky(self, a: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def solve_lower(self, l: jax.Array, b: jax.Array, *,
+                    transpose: bool = False) -> jax.Array:
+        raise NotImplementedError
+
+    def solve_from_factor(self, l: jax.Array, g: jax.Array) -> jax.Array:
+        """L Lᵀ θ = g via forward + back substitution."""
+        w = self.solve_lower(l, g)
+        return self.solve_lower(l, w, transpose=True)
+
+    def pack_tril(self, mat: jax.Array, block: int) -> jax.Array:
+        raise NotImplementedError
+
+    def unpack_tril(self, vec: jax.Array, h: int, block: int) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend(LinalgBackend):
+    """``jnp.linalg`` path — correct on every platform, XLA-fused."""
+
+    name: str = "reference"
+
+    def cholesky(self, a):
+        return jnp.linalg.cholesky(a)
+
+    def solve_lower(self, l, b, *, transpose=False):
+        b2 = b[..., None] if b.ndim == l.ndim - 1 else b
+        out = jax.lax.linalg.triangular_solve(
+            l, b2.astype(l.dtype), left_side=True, lower=True,
+            transpose_a=transpose)
+        return out[..., 0] if b.ndim == l.ndim - 1 else out
+
+    def pack_tril(self, mat, block):
+        from . import packing
+        return packing.pack_tril(mat, block)
+
+    def unpack_tril(self, vec, h, block):
+        from . import packing
+        return packing.unpack_tril(vec, h, block)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(LinalgBackend):
+    """Pallas kernel path: blocked Cholesky, blocked trsm, tile pack/unpack.
+
+    ``chol_block`` / ``trsm_block`` are the kernel tile sizes (MXU-sized on
+    real TPUs, small in CPU interpret-mode tests); ``pack_block`` must match
+    the packing layout the caller uses elsewhere.
+    """
+
+    name: str = "pallas"
+    chol_block: int = 256
+    trsm_block: int = 256
+
+    def cholesky(self, a):
+        from repro.kernels.chol_blocked import cholesky_blocked
+        return cholesky_blocked(a, block=self.chol_block)
+
+    def solve_lower(self, l, b, *, transpose=False):
+        from repro.kernels.trsm import solve_lower_blocked
+        return solve_lower_blocked(l, b, self.trsm_block, transpose=transpose)
+
+    def pack_tril(self, mat, block):
+        from repro.kernels.tri_pack import pack_tril
+
+        def one(m):
+            return pack_tril(m, block)
+
+        fn = one
+        for _ in range(mat.ndim - 2):  # kernel is single-matrix; batch via vmap
+            fn = jax.vmap(fn)
+        return fn(mat)
+
+    def unpack_tril(self, vec, h, block):
+        from repro.kernels.tri_pack import unpack_tril
+
+        def one(v):
+            return unpack_tril(v, h, block)
+
+        fn = one
+        for _ in range(vec.ndim - 1):
+            fn = jax.vmap(fn)
+        return fn(vec)
+
+
+BackendLike = Union[None, str, LinalgBackend]
+
+
+def resolve_backend(backend: BackendLike = None, *,
+                    block: int | None = None) -> LinalgBackend:
+    """Map a ``backend=`` argument to a concrete :class:`LinalgBackend`.
+
+    ``block`` (when given) sizes the Pallas kernel tiles — callers running
+    small test problems pass their packing block so interpret-mode kernels
+    stay proportionate.
+    """
+    if isinstance(backend, LinalgBackend):
+        return backend
+    if backend is None or backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if backend in ("reference", "ref", "jnp"):
+        return ReferenceBackend()
+    if backend == "pallas":
+        if block is not None:
+            return PallasBackend(chol_block=block, trsm_block=block)
+        return PallasBackend()
+    raise ValueError(f"unknown backend {backend!r}; expected 'auto', "
+                     "'pallas', 'reference', or a LinalgBackend")

@@ -1,19 +1,31 @@
-"""k-fold cross-validation drivers (§6): exact Chol sweep, piCholesky,
-Multi-level Cholesky, SVD family, and the PINRMSE straw-man.
+"""k-fold cross-validation drivers (§6) — compatibility layer.
 
-The fold trick: with ``H_f = X_fᵀX_f`` per fold, the training Hessian of
-fold f is ``H − H_f`` (one pass over the data, §1's O(nd²) paid once).
+The six public ``cv_*`` drivers keep their original signatures but are now
+thin wrappers over :class:`repro.core.engine.CVEngine`: one jitted, batched
+fold × λ sweep per call instead of host-side Python loops.  All wrappers
+accept two opt-in kwargs the legacy API did not have:
+
+* ``backend=`` — ``'auto'`` | ``'pallas'`` | ``'reference'`` linear-algebra
+  backend (see :mod:`repro.core.backends`),
+* ``mesh=`` — ``None`` | ``'auto'`` | a 2-D (folds × lams) Mesh to shard
+  the sweep (see :func:`repro.distributed.sharding.make_cv_mesh`).
+
+``cv_multilevel_cholesky`` (MChol, §6.2) remains a host-side driver: its
+binary search is decision-dependent, so there is no dense grid to batch.
+
+The original host-loop implementations live on in
+:mod:`repro.core.cv_host` as the benchmark baseline and test oracle.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import packing, picholesky, solvers
+from . import picholesky, solvers
+from .backends import BackendLike
+from .engine import CVEngine, make_strategy
+from .folds import CVResult, FoldData, holdout_nrmse, make_folds
 
 __all__ = [
     "FoldData", "make_folds", "holdout_nrmse", "CVResult",
@@ -22,67 +34,46 @@ __all__ = [
 ]
 
 
-class FoldData(NamedTuple):
-    """Per-fold sufficient statistics + raw held-out blocks."""
-    hess: jax.Array        # (h, h) total XᵀX
-    grad: jax.Array        # (h,)   total Xᵀy
-    fold_hess: jax.Array   # (k, h, h)
-    fold_grad: jax.Array   # (k, h)
-    x_folds: jax.Array     # (k, n_f, h)
-    y_folds: jax.Array     # (k, n_f)
+# One engine (→ one jit cache) per distinct driver configuration, so
+# repeated driver calls with the same shapes hit compiled code.  Bounded:
+# callers that pass a fresh callable per call (new id() each time, e.g. a
+# chol_fn lambda built in a loop) would otherwise grow this forever.
+_ENGINES: dict = {}
+_ENGINE_CACHE_MAX = 64
 
 
-def make_folds(x: jax.Array, y: jax.Array, k: int) -> FoldData:
-    n = x.shape[0]
-    n_f = n // k
-    x = x[: n_f * k].reshape(k, n_f, -1)
-    y = y[: n_f * k].reshape(k, n_f)
-    fold_hess = jnp.einsum("kni,knj->kij", x, x)
-    fold_grad = jnp.einsum("kni,kn->ki", x, y)
-    return FoldData(fold_hess.sum(0), fold_grad.sum(0), fold_hess, fold_grad, x, y)
+def _engine(name: str, backend: BackendLike, mesh, engine_block=None,
+            **params) -> CVEngine:
+    """``engine_block`` sizes the Pallas kernel tiles (CVEngine.block);
+    a strategy-level ``block`` (packing layout) goes in ``params``."""
+    def hashable(v):
+        if isinstance(v, (jax.Array, np.ndarray)):
+            return np.asarray(v).tobytes()
+        return v if v.__hash__ is not None else id(v)
 
-
-def holdout_nrmse(theta: jax.Array, x_hold: jax.Array, y_hold: jax.Array) -> jax.Array:
-    """Normalized RMSE on the held-out fold (paper's hold-out error)."""
-    pred = x_hold @ theta
-    mse = jnp.mean((pred - y_hold) ** 2)
-    denom = jnp.std(y_hold) + 1e-30
-    return jnp.sqrt(mse) / denom
-
-
-@dataclasses.dataclass
-class CVResult:
-    lams: np.ndarray           # dense candidate grid
-    errors: np.ndarray         # (q,) mean hold-out error across folds
-    best_lam: float
-    best_error: float
-    n_exact_chol: int          # factorizations actually performed
-    extras: dict = dataclasses.field(default_factory=dict)
-
-    @staticmethod
-    def from_errors(lams, errors, n_exact, **extras) -> "CVResult":
-        lams = np.asarray(lams)
-        errors = np.asarray(errors)
-        i = int(np.argmin(errors))
-        return CVResult(lams, errors, float(lams[i]), float(errors[i]),
-                        n_exact, dict(extras))
+    key = (name, backend if isinstance(backend, str) or backend is None
+           else id(backend),
+           mesh if mesh in (None, "auto") else id(mesh), engine_block,
+           tuple((k, hashable(v)) for k, v in sorted(params.items())))
+    if key not in _ENGINES:
+        while len(_ENGINES) >= _ENGINE_CACHE_MAX:
+            _ENGINES.pop(next(iter(_ENGINES)))
+        _ENGINES[key] = CVEngine(make_strategy(name, **params),
+                                 backend=backend, mesh=mesh,
+                                 block=engine_block)
+    return _ENGINES[key]
 
 
 def _fold_train_stats(folds: FoldData, f: jax.Array):
     return folds.hess - folds.fold_hess[f], folds.grad - folds.fold_grad[f]
 
 
-def cv_exact_cholesky(folds: FoldData, lams: jax.Array, chol_fn=None) -> CVResult:
+def cv_exact_cholesky(folds: FoldData, lams: jax.Array, chol_fn=None, *,
+                      backend: BackendLike = "reference",
+                      mesh=None) -> CVResult:
     """Chol baseline: k·q exact factorizations."""
-    k = folds.fold_hess.shape[0]
-
-    def per_fold(f):
-        h_tr, g_tr = _fold_train_stats(folds, f)
-        thetas = solvers.solve_cholesky_sweep(h_tr, g_tr, lams, chol_fn)
-        return jax.vmap(lambda t: holdout_nrmse(t, folds.x_folds[f], folds.y_folds[f]))(thetas)
-
-    errs = jax.vmap(per_fold)(jnp.arange(k))  # (k, q)
-    return CVResult.from_errors(lams, errs.mean(0), k * len(lams))
+    eng = _engine("exact", backend, mesh, chol_fn=chol_fn)
+    return eng.run(folds, lams)
 
 
 def cv_picholesky(
@@ -94,22 +85,16 @@ def cv_picholesky(
     block: int = 128,
     basis: str = "monomial",
     chol_fn=None,
+    backend: BackendLike = "reference",
+    mesh=None,
 ) -> CVResult:
     """piCholesky CV: k·g exact factorizations + interpolation for the rest."""
-    k = folds.fold_hess.shape[0]
-    sample = picholesky.choose_sample_lambdas(float(lams[0]), float(lams[-1]), g)
-
-    def per_fold(f):
-        h_tr, g_tr = _fold_train_stats(folds, f)
-        model = picholesky.fit(h_tr, sample, degree, block=block, basis=basis,
-                               chol_fn=chol_fn)
-        l_interp = model.eval_factor(lams)  # (q, h, h)
-        thetas = jax.vmap(lambda l: solvers.solve_from_factor(l, g_tr))(l_interp)
-        return jax.vmap(lambda t: holdout_nrmse(t, folds.x_folds[f], folds.y_folds[f]))(thetas)
-
-    errs = jax.vmap(per_fold)(jnp.arange(k))
-    return CVResult.from_errors(lams, errs.mean(0), k * g,
-                                sample_lams=np.asarray(sample))
+    eng = _engine("picholesky", backend, mesh, engine_block=block, g=g,
+                  degree=degree, block=block, basis=basis, chol_fn=chol_fn)
+    result = eng.run(folds, lams)
+    result.extras["sample_lams"] = np.asarray(
+        picholesky.choose_sample_lambdas(float(lams[0]), float(lams[-1]), g))
+    return result
 
 
 def cv_picholesky_warmstart(
@@ -119,64 +104,30 @@ def cv_picholesky_warmstart(
     g_rest: int = 2,
     degree: int = 2,
     *,
-    mu: float = 1.0,
+    mu: float = 1e-6,
     block: int = 128,
     chol_fn=None,
+    backend: BackendLike = "reference",
+    mesh=None,
 ) -> CVResult:
     """piCholesky with cross-fold warm-starting (the paper's §7 future work).
 
-    Fold 0 fits Θ⁰ from ``g_first`` exact factorizations.  Later folds'
-    Hessians differ only by one fold block (H − H_f), so their coefficient
-    matrices are close to Θ⁰: they are fit from just ``g_rest`` samples with
-    a ridge pull toward Θ⁰:
+    An anchor fit on fold 0 (``g_first`` exact factorizations) provides a
+    coefficient prior; every fold then refits only the *residual* from
+    ``g_rest`` fresh factorizations with a scale-relative damping ``mu``
+    (see :class:`repro.core.engine.PiCholeskyWarmstart` for the exact
+    objective — ``mu`` is relative, not an absolute Tikhonov weight).
 
-        Θ_f = (VᵀV + μI)⁻¹ (VᵀT_f + μΘ⁰)
-
-    Total factorizations: g_first + (k−1)·g_rest  (vs k·g for plain PIChol).
+    Total factorizations: g_first + k·g_rest  (vs k·g for plain PIChol).
     """
-    k = folds.fold_hess.shape[0]
-    chol = chol_fn or jnp.linalg.cholesky
-    sample_full = picholesky.choose_sample_lambdas(float(lams[0]),
-                                                   float(lams[-1]), g_first)
-    # anchor fold: full fit + its λ* locates the region that matters
-    h0, g0 = _fold_train_stats(folds, jnp.asarray(0))
-    base = picholesky.fit(h0, sample_full, degree, block=block, chol_fn=chol)
-    th0 = jax.vmap(lambda l: solvers.solve_from_factor(l, g0)
-                   )(base.eval_factor(lams))
-    e0 = jax.vmap(lambda t: holdout_nrmse(t, folds.x_folds[0],
-                                          folds.y_folds[0]))(th0)
-    lam_anchor = float(lams[int(np.argmin(np.asarray(e0)))])
-
-    # refresh points for the remaining folds, clustered ±1 decade around the
-    # anchor optimum (per Thm 4.7, accuracy is only needed near λ*)
-    sample_rest = jnp.logspace(np.log10(lam_anchor) - 1,
-                               np.log10(lam_anchor) + 1,
-                               max(g_rest, 1)).astype(lams.dtype)
-    v = picholesky.vandermonde(sample_rest, degree).astype(base.theta.dtype)
-    vtv = v.T @ v
-    eye = jnp.eye(degree + 1, dtype=v.dtype)
-
-    def fold_errors(f):
-        h_tr, g_tr = _fold_train_stats(folds, f)
-        if int(f) == 0:
-            return e0
-        h = h_tr.shape[-1]
-        ident = jnp.eye(h, dtype=h_tr.dtype)
-        factors = jax.vmap(lambda lam: chol(h_tr + lam * ident))(sample_rest)
-        t = packing.pack_tril(factors, block)
-        theta = jnp.linalg.solve(vtv + mu * eye,
-                                 v.T @ t + mu * base.theta)
-        model = picholesky.PiCholesky(theta=theta, center=base.center,
-                                      h=base.h, block=block)
-        l_interp = model.eval_factor(lams)
-        thetas = jax.vmap(lambda l: solvers.solve_from_factor(l, g_tr))(l_interp)
-        return jax.vmap(lambda th: holdout_nrmse(
-            th, folds.x_folds[f], folds.y_folds[f]))(thetas)
-
-    errs = jnp.stack([fold_errors(jnp.asarray(f)) for f in range(k)])
-    n_chol = g_first + (k - 1) * max(g_rest, 1)
-    return CVResult.from_errors(lams, errs.mean(0), n_chol,
-                                sample_lams=np.asarray(sample_full))
+    eng = _engine("picholesky_warmstart", backend, mesh, engine_block=block,
+                  g_first=g_first, g_rest=g_rest, degree=degree, mu=mu,
+                  block=block, chol_fn=chol_fn)
+    result = eng.run(folds, lams)
+    result.extras["sample_lams"] = np.asarray(
+        picholesky.choose_sample_lambdas(float(lams[0]), float(lams[-1]),
+                                         g_first))
+    return result
 
 
 def cv_multilevel_cholesky(
@@ -190,6 +141,8 @@ def cv_multilevel_cholesky(
 
     Starts from range [10^(c−s), 10^(c+s)]; each level evaluates the three
     shifts 10^{c−s},10^c,10^{c+s}, recenters on the argmin, halves s.
+    (Host-side by construction: each level's shifts depend on the previous
+    level's argmin, so there is no dense grid for the engine to batch.)
     """
     k = folds.fold_hess.shape[0]
     visited_lams, visited_errs, n_chol = [], [], 0
@@ -222,39 +175,21 @@ def cv_multilevel_cholesky(
 
 
 def cv_svd(folds: FoldData, lams: jax.Array, mode: str = "full",
-           k_trunc: int = 0, key=None) -> CVResult:
+           k_trunc: int = 0, key=None, *,
+           backend: BackendLike = "reference", mesh=None) -> CVResult:
     """SVD / t-SVD / r-SVD baselines operating on the raw design matrix."""
-    k = folds.fold_hess.shape[0]
-    n_f = folds.x_folds.shape[1]
-    idx = jnp.arange(k)
-
-    def per_fold(f):
-        mask = idx != f
-        x_tr = folds.x_folds[mask.nonzero(size=k - 1)[0]].reshape((k - 1) * n_f, -1)
-        y_tr = folds.y_folds[mask.nonzero(size=k - 1)[0]].reshape(-1)
-        if mode == "full":
-            thetas = solvers.solve_svd(x_tr, y_tr, lams)
-        elif mode == "truncated":
-            thetas = solvers.solve_truncated_svd(x_tr, y_tr, lams, k_trunc)
-        else:
-            thetas = solvers.solve_randomized_svd(x_tr, y_tr, lams, k_trunc, key)
-        return jax.vmap(lambda t: holdout_nrmse(t, folds.x_folds[f], folds.y_folds[f]))(thetas)
-
-    errs = jnp.stack([per_fold(f) for f in range(k)])
-    return CVResult.from_errors(lams, errs.mean(0), 0)
+    eng = _engine("svd", backend, mesh, mode=mode, k_trunc=k_trunc, key=key)
+    return eng.run(folds, lams)
 
 
 def cv_pinrmse(folds: FoldData, lams: jax.Array, g: int = 4, degree: int = 2,
-               chol_fn=None) -> CVResult:
+               chol_fn=None, *, backend: BackendLike = "reference",
+               mesh=None) -> CVResult:
     """PINRMSE straw-man (§6.5): interpolate the hold-out-error curve itself
     from g exact evaluations — shown by the paper to select wrong λ's."""
-    sample = picholesky.choose_sample_lambdas(float(lams[0]), float(lams[-1]), g)
-    exact = cv_exact_cholesky(folds, sample, chol_fn)
-    v = picholesky.vandermonde(sample, degree).astype(jnp.float64
-                                                      if jax.config.jax_enable_x64 else jnp.float32)
-    t = jnp.asarray(exact.errors, v.dtype)
-    theta = jnp.linalg.solve(v.T @ v, v.T @ t)
-    dense_v = picholesky.vandermonde(lams, degree).astype(v.dtype)
-    errs = dense_v @ theta
-    k = folds.fold_hess.shape[0]
-    return CVResult.from_errors(lams, errs, k * g, sample_lams=np.asarray(sample))
+    eng = _engine("pinrmse", backend, mesh, g=g, degree=degree,
+                  chol_fn=chol_fn)
+    result = eng.run(folds, lams)
+    result.extras["sample_lams"] = np.asarray(
+        picholesky.choose_sample_lambdas(float(lams[0]), float(lams[-1]), g))
+    return result

@@ -1,0 +1,443 @@
+"""Unified CV engine: one jitted, batched, sharded fold × λ sweep.
+
+The paper's experiment is a dense grid of independent ridge solves — k folds
+by q regularizers.  The legacy drivers in :mod:`repro.core.cv` walked that
+grid with host-side Python loops (one trace per fold, NumPy syncs mid-sweep).
+This module runs the whole grid as **one jitted computation**:
+
+* folds are batched with ``vmap`` (all per-fold factorizations/fits are a
+  single batched kernel launch),
+* with a mesh, the grid is laid over a 2-D ``(folds × lams)`` device mesh
+  via ``shard_map`` — fold Hessians shard over the fold axis, the λ grid
+  over the λ axis (padded to divisibility, see
+  :mod:`repro.distributed.sharding`),
+* the per-fold training Hessians are donated into the sweep so the largest
+  intermediate (k × h × h) never holds two copies in HBM,
+* all linear algebra goes through one ``backend=`` switch
+  (:mod:`repro.core.backends`): Pallas kernels on TPU, ``jnp.linalg``
+  elsewhere.
+
+Algorithms plug in through the small :class:`CVStrategy` protocol; the five
+paper algorithms (`exact`, `picholesky`, `picholesky_warmstart`, `svd`,
+`pinrmse`) ship as built-ins.  Adding a strategy means implementing at most
+three methods:
+
+``prepare(x_folds, y_folds, h_tr, g_tr, lams, bk)``
+    Replicated setup (runs identically on every device): pick sample λs,
+    fit an anchor model, stash training data a fold needs from *other*
+    folds.  Returns an arbitrary pytree ``aux`` (default ``()``).
+``fold_state(f_idx, h_tr_f, g_tr_f, aux, bk)``
+    The heavy λ-independent per-fold stage (factorizations, SVDs, fits).
+    Runs under ``vmap`` over folds, sharded over the fold mesh axis.
+``fold_errors(state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk)``
+    The per-(fold, λ) stage: evaluate/solve/score on a (possibly λ-sharded)
+    grid chunk.  Returns the (q_local,) hold-out error curve.
+
+``MChol`` (§6.2) stays a host-side driver in :mod:`repro.core.cv`: its
+binary search is decision-dependent and factorizes three shifts per level,
+so there is no dense grid to batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shardlib
+
+from . import picholesky, solvers
+from .backends import BackendLike, LinalgBackend, resolve_backend
+from .folds import CVResult, FoldData, holdout_nrmse
+
+__all__ = [
+    "CVStrategy", "CVEngine", "make_strategy", "STRATEGIES",
+    "ExactCholesky", "PiCholeskyStrategy", "PiCholeskyWarmstart",
+    "SVDStrategy", "PinrmseStrategy",
+]
+
+
+def _sample_grid(lams: jax.Array, g: int) -> jax.Array:
+    """g log-spaced sample shifts spanning the dense grid (traced-safe).
+
+    Same nodes as the host drivers and the ``extras['sample_lams']`` the
+    wrappers report — one definition, so they cannot drift apart.
+    """
+    return picholesky.choose_sample_lambdas(lams[0], lams[-1], g
+                                            ).astype(lams.dtype)
+
+
+def _errors_from_thetas(thetas: jax.Array, x_f: jax.Array,
+                        y_f: jax.Array) -> jax.Array:
+    return jax.vmap(lambda t: holdout_nrmse(t, x_f, y_f))(thetas)
+
+
+# ------------------------------------------------------------------ protocol
+
+
+@runtime_checkable
+class CVStrategy(Protocol):
+    name: str
+
+    def n_exact_chol(self, k: int, q: int) -> int: ...
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams,
+                bk: LinalgBackend) -> Any: ...
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux,
+                   bk: LinalgBackend) -> Any: ...
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux,
+                    bk: LinalgBackend) -> jax.Array: ...
+
+
+class StrategyBase:
+    """Default no-op prepare/fold_state for strategies that don't need them."""
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        return ()
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        return ()
+
+
+# ---------------------------------------------------------------- strategies
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExactCholesky(StrategyBase):
+    """Chol baseline: factorize at every (fold, λ) — k·q factorizations.
+
+    All the work sits in ``fold_errors`` so it parallelizes over *both* mesh
+    axes: each device factorizes only its own (fold, λ) sub-grid.
+    """
+
+    chol_fn: Optional[Callable] = None
+    name: str = "exact"
+
+    def n_exact_chol(self, k, q):
+        return k * q
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        thetas = solvers.solve_cholesky_sweep(h_tr_f, g_tr_f, lams,
+                                              self.chol_fn, bk)
+        return _errors_from_thetas(thetas, x_f, y_f)
+
+
+class _InterpolantErrors:
+    """Shared λ-stage for the piCholesky family: evaluate the fitted
+    interpolant at the local λ chunk, substitute, score."""
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        l_interp = state.eval_factor(lams, backend=bk)       # (q_loc, h, h)
+        thetas = jax.vmap(lambda l: bk.solve_from_factor(l, g_tr_f))(l_interp)
+        return _errors_from_thetas(thetas, x_f, y_f)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
+    """Algorithm 1 per fold: g exact factorizations + a polynomial fit;
+    the dense sweep reads the interpolant only."""
+
+    g: int = 4
+    degree: int = 2
+    block: int = 128
+    basis: str = "monomial"
+    chol_fn: Optional[Callable] = None
+    name: str = "picholesky"
+
+    def n_exact_chol(self, k, q):
+        return k * self.g
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        return _sample_grid(lams, self.g)
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        return picholesky.fit(h_tr_f, aux, self.degree, block=self.block,
+                              basis=self.basis, chol_fn=self.chol_fn,
+                              backend=bk)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
+    """Cross-fold warm-starting (paper §7 future work).
+
+    An anchor fit on fold 0 (``g_first`` factorizations over the full λ
+    range) provides the coefficient prior Θ⁰.  Later folds' training
+    Hessians differ from fold 0's by only two fold blocks (H−H_f vs H−H_0),
+    so their factor curves are close to the anchor's: each fold refits only
+    the **residual** from ``g_rest`` fresh factorizations at full-range
+    nodes,
+
+        Θ_f = Θ⁰ + argmin_Δ ‖V_r Δ − (T_f − V_r Θ⁰)‖² + μ‖S Δ‖²
+
+    with S² = diag(V_rᵀV_r) making the damping scale-relative per monomial
+    order (the λ grid spans decades, so absolute Tikhonov either crushes
+    the constant term or ignores the quadratic one).  Because the residual
+    targets are small, the correction degrades gracefully: with
+    ``g_rest ≤ degree`` the unseen directions simply stay at the anchor
+    value instead of extrapolating wildly — the failure mode that made the
+    original host driver select edge-of-grid λ's.
+    """
+
+    g_first: int = 4
+    g_rest: int = 2
+    degree: int = 2
+    mu: float = 1e-6
+    block: int = 128
+    chol_fn: Optional[Callable] = None
+    name: str = "picholesky_warmstart"
+
+    def n_exact_chol(self, k, q):
+        # anchor fit + one refresh per fold (fold 0's refresh included:
+        # the sweep stays uniform across folds, so it is performed)
+        return self.g_first + k * max(self.g_rest, 1)
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        chol = self.chol_fn or bk.cholesky
+        sample_full = _sample_grid(lams, self.g_first)
+        base = picholesky.fit(h_tr[0], sample_full, self.degree,
+                              block=self.block, chol_fn=chol, backend=bk)
+        sample_rest = _sample_grid(lams, max(self.g_rest, 1))
+        v_rest = picholesky.vandermonde(sample_rest, self.degree
+                                        ).astype(base.theta.dtype)
+        gram = v_rest.T @ v_rest
+        lhs = gram + self.mu * jnp.diag(jnp.diag(gram))
+        return dict(sample_rest=sample_rest, v_rest=v_rest, lhs=lhs,
+                    base_theta=base.theta, center=base.center)
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        chol = self.chol_fn or bk.cholesky
+        h = h_tr_f.shape[-1]
+        eye = jnp.eye(h, dtype=h_tr_f.dtype)
+        factors = jax.vmap(lambda lam: chol(h_tr_f + lam * eye)
+                           )(aux["sample_rest"])
+        t = bk.pack_tril(factors, self.block)
+        resid = t - aux["v_rest"] @ aux["base_theta"]
+        dtheta = jnp.linalg.solve(aux["lhs"], aux["v_rest"].T @ resid)
+        return picholesky.PiCholesky(theta=aux["base_theta"] + dtheta,
+                                     center=aux["center"],
+                                     h=h, block=self.block)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SVDStrategy(StrategyBase):
+    """SVD / t-SVD / r-SVD baselines on the raw design matrix.
+
+    Training rows come from the k−1 *other* folds, so the raw fold blocks
+    ride along replicated in ``aux`` while the heavy per-fold SVD shards
+    over the fold axis.
+    """
+
+    mode: str = "full"                 # full | truncated | randomized
+    k_trunc: int = 0
+    key: Optional[jax.Array] = None    # r-SVD projection key (shared by folds)
+    name: str = "svd"
+
+    def n_exact_chol(self, k, q):
+        return 0
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        return dict(x=x_folds, y=y_folds)
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        k, n_f, h = aux["x"].shape
+        others = (f_idx + 1 + jnp.arange(k - 1)) % k
+        x_tr = aux["x"][others].reshape((k - 1) * n_f, h)
+        y_tr = aux["y"][others].reshape(-1)
+        s, vt, uty = solvers.svd_ridge_factors(x_tr, y_tr, self.mode,
+                                               self.k_trunc, self.key)
+        return dict(s=s, vt=vt, uty=uty)
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        thetas = solvers.svd_ridge_sweep(
+            (state["s"], state["vt"], state["uty"]), lams)
+        return _errors_from_thetas(thetas, x_f, y_f)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PinrmseStrategy(StrategyBase):
+    """PINRMSE straw-man (§6.5): interpolate the hold-out-error *curve*
+    itself from g exact evaluations — the paper shows it selects wrong λ's.
+
+    The k·g exact evaluations need every fold's statistics at the same g
+    nodes plus a cross-fold mean, so they live in ``prepare`` (replicated —
+    at engine scale this stage is the cheap one; the dense sweep it replaces
+    is the cost being amortized).
+    """
+
+    g: int = 4
+    degree: int = 2
+    chol_fn: Optional[Callable] = None
+    name: str = "pinrmse"
+
+    def n_exact_chol(self, k, q):
+        return k * self.g
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        sample = _sample_grid(lams, self.g)
+
+        def fold_curve(h_f, g_f, x_f, y_f):
+            thetas = solvers.solve_cholesky_sweep(h_f, g_f, sample,
+                                                  self.chol_fn, bk)
+            return _errors_from_thetas(thetas, x_f, y_f)
+
+        mean_err = jax.vmap(fold_curve)(h_tr, g_tr, x_folds, y_folds).mean(0)
+        fit_dtype = (jnp.float64 if jax.config.jax_enable_x64
+                     else jnp.float32)
+        v = picholesky.vandermonde(sample, self.degree).astype(fit_dtype)
+        theta = jnp.linalg.solve(v.T @ v, v.T @ mean_err.astype(fit_dtype))
+        return theta
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        v = picholesky.vandermonde(lams, self.degree).astype(aux.dtype)
+        return v @ aux  # identical on every fold ⇒ mean is the curve itself
+
+
+STRATEGIES = {
+    "exact": ExactCholesky,
+    "picholesky": PiCholeskyStrategy,
+    "picholesky_warmstart": PiCholeskyWarmstart,
+    "svd": SVDStrategy,
+    "pinrmse": PinrmseStrategy,
+}
+
+
+def make_strategy(name: str, **params) -> CVStrategy:
+    try:
+        return STRATEGIES[name](**params)
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; have {sorted(STRATEGIES)}") from None
+
+
+# -------------------------------------------------------------------- engine
+
+
+MeshLike = Union[None, str, Mesh]
+
+
+@dataclasses.dataclass
+class CVEngine:
+    """Batched/sharded k-fold × λ sweep runner.
+
+    Parameters
+    ----------
+    strategy:  a :class:`CVStrategy` instance or registry name.
+    backend:   ``'auto'`` (Pallas on TPU, reference elsewhere) | ``'pallas'``
+               | ``'reference'`` | a :class:`LinalgBackend`.
+    mesh:      ``None`` (single device), ``'auto'`` (2-D folds × lams mesh
+               over all local devices), or an explicit 2-D Mesh whose axes
+               are ``(CV_FOLD_AXIS, CV_LAM_AXIS)``.
+    donate:    donate the per-fold training Hessians into the jitted sweep
+               (``None`` = on except on CPU, where XLA cannot alias).
+    block:     Pallas kernel tile size override for small test problems.
+    """
+
+    strategy: Union[CVStrategy, str]
+    backend: BackendLike = None
+    mesh: MeshLike = None
+    donate: Optional[bool] = None
+    block: Optional[int] = None
+
+    def __post_init__(self):
+        if isinstance(self.strategy, str):
+            self.strategy = make_strategy(self.strategy)
+        self._bk = resolve_backend(self.backend, block=self.block)
+        if self.donate is None:
+            self.donate = jax.default_backend() != "cpu"
+        self._sweeps: dict = {}   # mesh-key -> jitted sweep fn
+        self._split = jax.jit(
+            lambda hess, grad, fh, fg: (hess[None] - fh, grad[None] - fg))
+
+    # -- mesh -------------------------------------------------------------
+
+    def _resolve_mesh(self, k: int) -> Optional[Mesh]:
+        if self.mesh is None:
+            return None
+        if isinstance(self.mesh, Mesh):
+            return self.mesh
+        if self.mesh == "auto":
+            if len(jax.devices()) == 1:
+                return None
+            return shardlib.make_cv_mesh(k)
+        raise ValueError(f"mesh must be None, 'auto' or a Mesh; got {self.mesh!r}")
+
+    # -- sweep construction ----------------------------------------------
+
+    def _core(self, h_tr, g_tr, x_folds, y_folds, f_idx, lams, aux):
+        """(k_loc folds) × (q_loc λs) error grid — runs per device shard."""
+        strat, bk = self.strategy, self._bk
+        state = jax.vmap(
+            lambda f, h, g: strat.fold_state(f, h, g, aux, bk)
+        )(f_idx, h_tr, g_tr)
+        return jax.vmap(
+            lambda st, f, h, g, x, y: strat.fold_errors(
+                st, f, h, g, x, y, lams, aux, bk)
+        )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
+
+    def _build_sweep(self, mesh: Optional[Mesh]):
+        strat, bk = self.strategy, self._bk
+
+        def sweep(h_tr, g_tr, x_folds, y_folds, lams):
+            k = h_tr.shape[0]
+            f_idx = jnp.arange(k)
+            aux = strat.prepare(x_folds, y_folds, h_tr, g_tr, lams, bk)
+            if mesh is None:
+                return self._core(h_tr, g_tr, x_folds, y_folds, f_idx,
+                                  lams, aux)
+            fold_ax, lam_ax = shardlib.CV_FOLD_AXIS, shardlib.CV_LAM_AXIS
+            repl = jax.tree.map(lambda _: P(), aux)
+            sharded = shard_map(
+                self._core, mesh=mesh,
+                in_specs=(P(fold_ax), P(fold_ax), P(fold_ax), P(fold_ax),
+                          P(fold_ax), P(lam_ax), repl),
+                out_specs=P(fold_ax, lam_ax),
+                check_rep=False,
+            )
+            return sharded(h_tr, g_tr, x_folds, y_folds, f_idx, lams, aux)
+
+        donate = (0, 1) if self.donate else ()
+        return jax.jit(sweep, donate_argnums=donate)
+
+    def _sweep_fn(self, mesh: Optional[Mesh]):
+        key = None if mesh is None else (tuple(mesh.shape.items()),
+                                         tuple(map(id, mesh.devices.flat)))
+        if key not in self._sweeps:
+            self._sweeps[key] = self._build_sweep(mesh)
+        return self._sweeps[key]
+
+    # -- public API -------------------------------------------------------
+
+    def run(self, folds: FoldData, lams: jax.Array) -> CVResult:
+        lams = jnp.asarray(lams)
+        k = folds.fold_hess.shape[0]
+        q = lams.shape[0]
+        mesh = self._resolve_mesh(k)
+        if mesh is not None:
+            n_fold = mesh.shape[shardlib.CV_FOLD_AXIS]
+            if k % n_fold:
+                raise ValueError(
+                    f"{k} folds not divisible by mesh axis "
+                    f"{shardlib.CV_FOLD_AXIS}={n_fold}")
+            lams_run, _ = shardlib.pad_to_multiple(
+                lams, mesh.shape[shardlib.CV_LAM_AXIS])
+        else:
+            lams_run = lams
+
+        # engine-owned train-stat buffers: safe to donate into the sweep
+        h_tr, g_tr = self._split(folds.hess, folds.grad,
+                                 folds.fold_hess, folds.fold_grad)
+        errs = self._sweep_fn(mesh)(h_tr, g_tr, folds.x_folds,
+                                    folds.y_folds, lams_run)
+        errs = np.asarray(errs)[:, :q]
+        return CVResult.from_errors(
+            lams, errs.mean(0), self.strategy.n_exact_chol(k, q),
+            engine=dict(
+                strategy=self.strategy.name, backend=self._bk.name,
+                mesh=None if mesh is None else dict(mesh.shape),
+                donated=bool(self.donate)))

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from . import packing
+from .backends import BackendLike, resolve_backend
 
 __all__ = ["PiCholesky", "fit", "evaluate", "vandermonde", "choose_sample_lambdas"]
 
@@ -72,9 +73,11 @@ class PiCholesky:
         acc, _ = jax.lax.scan(horner, acc, self.theta[::-1])
         return acc[0] if scalar else acc
 
-    def eval_factor(self, lam: jax.Array) -> jax.Array:
+    def eval_factor(self, lam: jax.Array,
+                    backend: BackendLike = "reference") -> jax.Array:
         """Interpolated lower-triangular factor(s) L(λ): (…, h, h)."""
-        return packing.unpack_tril(self.eval_packed(lam), self.h, self.block)
+        return resolve_backend(backend).unpack_tril(
+            self.eval_packed(lam), self.h, self.block)
 
 
 def fit(
@@ -86,23 +89,27 @@ def fit(
     basis: str = "monomial",
     chol_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
     factors: Optional[jax.Array] = None,
+    backend: BackendLike = "reference",
 ) -> PiCholesky:
     """Algorithm 1.  ``hessian``: (h, h) SPD; ``sample_lams``: (g,) with
-    g > degree.  ``chol_fn`` lets callers inject the Pallas blocked Cholesky;
-    ``factors`` (g, h, h) skips factorization if the caller already has L^s.
+    g > degree.  ``backend`` selects the factorize/pack implementation
+    (Pallas kernels vs ``jnp.linalg``); ``chol_fn`` overrides just the
+    factorization; ``factors`` (g, h, h) skips factorization if the caller
+    already has L^s.
     """
     h = hessian.shape[-1]
     g = sample_lams.shape[0]
     if g <= degree:
         raise ValueError(f"need g > r: got g={g}, r={degree}")
-    chol_fn = chol_fn or jnp.linalg.cholesky
+    bk = resolve_backend(backend)
+    chol_fn = chol_fn or bk.cholesky
 
     if factors is None:
         eye = jnp.eye(h, dtype=hessian.dtype)
         factors = jax.vmap(lambda lam: chol_fn(hessian + lam * eye))(sample_lams)
 
     # Step 2: tile-packed target matrix T (g × P) — aligned BLAS-3 layout.
-    targets = packing.pack_tril(factors, block)
+    targets = bk.pack_tril(factors, block)
 
     center = jnp.mean(sample_lams) if basis == "centered" else jnp.zeros((), sample_lams.dtype)
     v = vandermonde(sample_lams, degree, center).astype(targets.dtype)

@@ -34,6 +34,8 @@ class RidgeCV:
     block: int = 128
     method: str = "pichol"          # pichol | exact
     ctx: Optional[MeshCtx] = None
+    backend: object = "reference"   # engine linalg backend ('auto'|'pallas'|…)
+    cv_mesh: object = None          # None | 'auto' | Mesh for the λ sweep
 
     def lambdas(self) -> jax.Array:
         return jnp.logspace(jnp.log10(self.lam_lo), jnp.log10(self.lam_hi),
@@ -48,9 +50,11 @@ class RidgeCV:
         folds = cvlib.make_folds(x, y, self.k_folds)
         lams = self.lambdas()
         if self.method == "exact":
-            return cvlib.cv_exact_cholesky(folds, lams)
+            return cvlib.cv_exact_cholesky(folds, lams, backend=self.backend,
+                                           mesh=self.cv_mesh)
         return cvlib.cv_picholesky(folds, lams, g=self.g_samples,
-                                   degree=self.degree, block=self.block)
+                                   degree=self.degree, block=self.block,
+                                   backend=self.backend, mesh=self.cv_mesh)
 
     def fit_theta(self, x: jax.Array, y: jax.Array):
         """CV-select λ*, then solve on the full data at λ*."""

@@ -3,6 +3,12 @@
 All solvers consume the normal-equation data ``H = XᵀX`` (h×h) and
 ``g = Xᵀy`` (h,) — or the design matrix ``X`` itself for the SVD family —
 and return θ(λ) for one or many λ.
+
+The Cholesky-family solvers accept ``backend=`` (``'auto'`` | ``'pallas'`` |
+``'reference'`` | a :class:`~repro.core.backends.LinalgBackend`) selecting
+the factorize/substitute implementation; a ``chol_fn`` override takes
+precedence over the backend's factorization (legacy hook, kept for the
+kernel-injection tests).
 """
 from __future__ import annotations
 
@@ -11,10 +17,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .backends import BackendLike, resolve_backend
+
 __all__ = [
     "solve_from_factor",
     "solve_cholesky",
     "solve_cholesky_sweep",
+    "svd_ridge_factors",
+    "svd_ridge_sweep",
     "solve_svd",
     "solve_truncated_svd",
     "randomized_range_finder",
@@ -22,60 +32,77 @@ __all__ = [
 ]
 
 
-def _tri_solve(l: jax.Array, b: jax.Array, *, lower: bool, trans: bool) -> jax.Array:
-    b2 = b[:, None] if b.ndim == 1 else b
-    out = jax.lax.linalg.triangular_solve(
-        l, b2, left_side=True, lower=lower, transpose_a=trans
-    )
-    return out[:, 0] if b.ndim == 1 else out
-
-
-def solve_from_factor(l: jax.Array, g: jax.Array) -> jax.Array:
+def solve_from_factor(l: jax.Array, g: jax.Array,
+                      backend: BackendLike = "reference") -> jax.Array:
     """Forward + back substitution: solve L Lᵀ θ = g (§3.2)."""
-    w = _tri_solve(l, g, lower=True, trans=False)
-    return _tri_solve(l, w, lower=True, trans=True)
+    return resolve_backend(backend).solve_from_factor(l, g)
 
 
 def solve_cholesky(hessian: jax.Array, g: jax.Array, lam: jax.Array,
-                   chol_fn=None) -> jax.Array:
+                   chol_fn=None, backend: BackendLike = "reference") -> jax.Array:
     """Exact Chol baseline for one λ."""
-    chol_fn = chol_fn or jnp.linalg.cholesky
+    bk = resolve_backend(backend)
+    chol_fn = chol_fn or bk.cholesky
     h = hessian.shape[-1]
     l = chol_fn(hessian + lam * jnp.eye(h, dtype=hessian.dtype))
-    return solve_from_factor(l, g)
+    return bk.solve_from_factor(l, g)
 
 
 def solve_cholesky_sweep(hessian: jax.Array, g: jax.Array, lams: jax.Array,
-                         chol_fn=None) -> jax.Array:
+                         chol_fn=None,
+                         backend: BackendLike = "reference") -> jax.Array:
     """Exact Chol for every λ in the grid — the O(q d³) cost piCholesky
     amortizes. (q, h)."""
-    return jax.vmap(lambda lam: solve_cholesky(hessian, g, lam, chol_fn))(lams)
+    bk = resolve_backend(backend)
+    return jax.vmap(
+        lambda lam: solve_cholesky(hessian, g, lam, chol_fn, bk))(lams)
 
 
-def solve_svd(x: jax.Array, y: jax.Array, lams: jax.Array) -> jax.Array:
-    """Full-SVD baseline (Eq. 11): factorize X once, reuse across all λ."""
-    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
-    uty = u.T @ y  # (k,)
+def svd_ridge_factors(x: jax.Array, y: jax.Array, mode: str = "full",
+                      k: int = 0, key: Optional[jax.Array] = None):
+    """λ-independent factor stage shared by the SVD family: returns
+    ``(s, vt, uty)`` such that θ(λ) = vtᵀ diag(s/(s²+λ)) uty.
+
+    ``mode``: ``'full'`` | ``'truncated'`` (top-k) | ``'randomized'``
+    (Halko–Martinsson–Tropp range finder, then top-k).
+    """
+    if mode == "full":
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    elif mode == "truncated":
+        u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+        u, s, vt = u[:, :k], s[:k], vt[:k]
+    elif mode == "randomized":
+        key = key if key is not None else jax.random.PRNGKey(0)
+        q = randomized_range_finder(x, k, key)
+        b = q.T @ x  # (p, h)
+        ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+        u = q @ ub
+        u, s, vt = u[:, :k], s[:k], vt[:k]
+    else:
+        raise ValueError(f"unknown SVD mode {mode!r}")
+    return s, vt, u.T @ y
+
+
+def svd_ridge_sweep(factors, lams: jax.Array) -> jax.Array:
+    """θ(λ) for every λ from a :func:`svd_ridge_factors` result. (q, h)."""
+    s, vt, uty = factors
 
     def per_lam(lam):
         d = s / (s * s + lam)
         return vt.T @ (d * uty)
 
     return jax.vmap(per_lam)(jnp.atleast_1d(lams))
+
+
+def solve_svd(x: jax.Array, y: jax.Array, lams: jax.Array) -> jax.Array:
+    """Full-SVD baseline (Eq. 11): factorize X once, reuse across all λ."""
+    return svd_ridge_sweep(svd_ridge_factors(x, y, "full"), lams)
 
 
 def solve_truncated_svd(x: jax.Array, y: jax.Array, lams: jax.Array,
                         k: int) -> jax.Array:
     """t-SVD baseline: keep only the top-k singular triplets."""
-    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
-    u, s, vt = u[:, :k], s[:k], vt[:k]
-    uty = u.T @ y
-
-    def per_lam(lam):
-        d = s / (s * s + lam)
-        return vt.T @ (d * uty)
-
-    return jax.vmap(per_lam)(jnp.atleast_1d(lams))
+    return svd_ridge_sweep(svd_ridge_factors(x, y, "truncated", k), lams)
 
 
 def randomized_range_finder(x: jax.Array, k: int, key: jax.Array,
@@ -95,16 +122,5 @@ def randomized_range_finder(x: jax.Array, k: int, key: jax.Array,
 def solve_randomized_svd(x: jax.Array, y: jax.Array, lams: jax.Array, k: int,
                          key: Optional[jax.Array] = None) -> jax.Array:
     """r-SVD baseline [13]: approximate top-k SVD via random projection."""
-    key = key if key is not None else jax.random.PRNGKey(0)
-    q = randomized_range_finder(x, k, key)
-    b = q.T @ x  # (p, h)
-    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
-    u = q @ ub
-    u, s, vt = u[:, :k], s[:k], vt[:k]
-    uty = u.T @ y
-
-    def per_lam(lam):
-        d = s / (s * s + lam)
-        return vt.T @ (d * uty)
-
-    return jax.vmap(per_lam)(jnp.atleast_1d(lams))
+    return svd_ridge_sweep(svd_ridge_factors(x, y, "randomized", k, key),
+                           lams)

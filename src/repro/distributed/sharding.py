@@ -7,14 +7,19 @@ divisibility so a bad mesh fails loudly at lowering time, not deep in XLA.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import math
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.params import Spec
 
-__all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec"]
+__all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
+           "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
+           "pad_to_multiple"]
 
 
 def spec_pspec(spec: Spec, ctx) -> P:
@@ -52,3 +57,46 @@ def param_shardings(tree: Any, ctx) -> Any:
 def data_pspec(ctx, ndim: int) -> P:
     """Batch-sharded PartitionSpec for an input of rank ``ndim``."""
     return P(ctx.dp_axes, *([None] * (ndim - 1)))
+
+
+# --------------------------------------------------------------- CV engine
+#
+# The CV sweep is a dense (fold × λ) grid of independent solves, so its
+# natural mesh is 2-D: fold Hessians shard over CV_FOLD_AXIS, the λ grid
+# over CV_LAM_AXIS.  These helpers pick the mesh shape from the problem
+# size and pad the λ grid so shard_map divisibility always holds.
+
+CV_FOLD_AXIS = "folds"
+CV_LAM_AXIS = "lams"
+
+
+def cv_axis_sizes(k: int, n_devices: int) -> Tuple[int, int]:
+    """(n_fold, n_lam) mesh shape for ``k`` folds on ``n_devices`` devices.
+
+    The fold axis takes the largest device count that divides ``k`` (fold
+    count is fixed by the problem; it cannot be padded), the λ axis absorbs
+    the remaining devices (the λ grid *can* be padded, see
+    :func:`pad_to_multiple`).
+    """
+    n_fold = math.gcd(k, n_devices)
+    return n_fold, n_devices // n_fold
+
+
+def make_cv_mesh(k: int, devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
+    """2-D (folds × lams) mesh over ``devices`` (default: all local)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n_fold, n_lam = cv_axis_sizes(k, len(devices))
+    dev = np.asarray(devices[: n_fold * n_lam]).reshape(n_fold, n_lam)
+    return Mesh(dev, (CV_FOLD_AXIS, CV_LAM_AXIS))
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0):
+    """Pad ``x`` along ``axis`` (edge mode) to a length divisible by
+    ``multiple``; returns (padded, original_length)."""
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, mode="edge"), n

@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import vmem_scratch
 
 __all__ = ["cholesky_blocked"]
 
@@ -99,7 +100,7 @@ def _factor_panel(panel: jax.Array, block: int, interpret: bool) -> jax.Array:
         in_specs=[pl.BlockSpec((block, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(panel.shape, panel.dtype),
-        scratch_shapes=[pltpu.MemorySpace.VMEM((block, block), panel.dtype)],
+        scratch_shapes=[vmem_scratch((block, block), panel.dtype)],
         interpret=interpret,
     )(panel)
 

@@ -1,0 +1,22 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed the TPU memory-space handles across 0.4.x → 0.5.x:
+
+* old: ``pltpu.VMEM(shape, dtype)`` scratch, ``pltpu.SMEM`` block memory space
+* new: ``pltpu.MemorySpace.VMEM(shape, dtype)`` / ``pltpu.MemorySpace.SMEM``
+
+Kernels import these two names instead of touching ``pltpu`` directly so the
+same kernel body lowers under either jax release.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["vmem_scratch", "SMEM"]
+
+if hasattr(pltpu, "VMEM"):
+    vmem_scratch = pltpu.VMEM
+    SMEM = pltpu.SMEM
+else:  # pragma: no cover - newer jax
+    vmem_scratch = pltpu.MemorySpace.VMEM
+    SMEM = pltpu.MemorySpace.SMEM

@@ -20,6 +20,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import SMEM
+
 from repro.core import packing
 
 __all__ = ["interp_factors"]
@@ -72,7 +74,7 @@ def interp_factors(theta: jax.Array, lams: jax.Array, h: int, block: int = 128,
         num_scalar_prefetch=1,
         grid=(q, nt, nt),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # λ values
+            pl.BlockSpec(memory_space=SMEM),  # λ values
             pl.BlockSpec((degree + 1, 1, block, block),
                          lambda t, i, j, pidx: (0, pidx[i * nt + j], 0, 0)),
         ],

@@ -19,7 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (grid specs)
+
+from .compat import vmem_scratch
 
 __all__ = ["ssm_scan"]
 
@@ -97,7 +99,7 @@ def ssm_scan(xc: jax.Array, dt: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
             jax.ShapeDtypeStruct((bsz, s, di), f32),
             jax.ShapeDtypeStruct((bsz, di, n), f32),
         ],
-        scratch_shapes=[pltpu.MemorySpace.VMEM((di_block, n), f32)],
+        scratch_shapes=[vmem_scratch((di_block, n), f32)],
         interpret=interpret,
     )(xc.astype(f32), dt.astype(f32), b_mat.astype(f32), c_mat.astype(f32),
       a.astype(f32), d_skip.astype(f32))

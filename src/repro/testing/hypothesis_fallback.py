@@ -1,0 +1,194 @@
+"""Minimal drop-in for ``hypothesis`` when the real package is absent.
+
+The tier-1 suite property-tests with hypothesis (declared in
+``requirements-dev.txt``), but hermetic containers may not have it
+installed and cannot ``pip install``.  ``tests/conftest.py`` calls
+:func:`install` in that case, which registers this module under
+``sys.modules['hypothesis']`` so the test files import unchanged.
+
+Scope: deterministic example generation for the strategy subset the suite
+uses (``integers``, ``sampled_from``, ``floats``, ``booleans``, ``just``).
+Examples are seeded from the test name, boundary values run first, and a
+failing example is reported in the assertion chain.  No shrinking, no
+database, no health checks — when the real hypothesis is installed it
+always wins (``install`` is only reached on ImportError).
+"""
+from __future__ import annotations
+
+import enum
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+__all__ = ["install", "given", "settings", "assume", "strategies",
+           "HealthCheck", "Verbosity"]
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    """A strategy = boundary examples + a random sampler."""
+
+    def __init__(self, sample: Callable[[random.Random], Any],
+                 boundaries: Sequence[Any] = ()):
+        self._sample = sample
+        self._boundaries = list(boundaries)
+
+    def boundaries(self):
+        return list(self._boundaries)
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._sample(rng)),
+                              [fn(b) for b in self._boundaries])
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          [min_value, max_value])
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements), elements[:2])
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          [min_value, max_value])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, [False, True])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, [value])
+
+
+class HealthCheck(enum.Enum):
+    data_too_large = 1
+    filter_too_much = 2
+    too_slow = 3
+    function_scoped_fixture = 4
+
+    @classmethod
+    def all(cls):
+        return list(cls)
+
+
+class Verbosity(enum.IntEnum):
+    quiet = 0
+    normal = 1
+    verbose = 2
+    debug = 3
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording run parameters on the test function.
+
+    Works in either decorator order relative to ``@given``: it simply tags
+    whatever callable it receives; the ``@given`` runner reads the tag at
+    call time.
+    """
+
+    def tag(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return tag
+
+
+def given(**strats: SearchStrategy):
+    """Deterministic example-driving decorator.
+
+    Runs the cartesian boundary examples first, then random draws seeded
+    from the test name, for ``max_examples`` total iterations.  Examples
+    rejected via :func:`assume` don't count toward the total.
+    """
+
+    def decorate(fn):
+        def runner():
+            cfg = (getattr(runner, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", None)
+                   or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            max_examples = cfg["max_examples"]
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            names = sorted(strats)
+            queue = []
+            width = max((len(strats[n].boundaries()) for n in names),
+                        default=0)
+            for i in range(width):
+                queue.append({n: strats[n].boundaries()[
+                    i % max(len(strats[n].boundaries()), 1)]
+                    for n in names if strats[n].boundaries()})
+            ran = 0
+            while ran < max_examples:
+                example = (queue.pop(0) if queue else
+                           {n: strats[n].example(rng) for n in names})
+                try:
+                    fn(**example)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {example!r}"
+                    ) from err
+                ran += 1
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        if hasattr(fn, "_fallback_settings"):
+            runner._fallback_settings = fn._fallback_settings
+        return runner
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:   # real package (or already installed)
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.Verbosity = Verbosity
+    hyp.__is_repro_fallback__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.floats = floats
+    st.booleans = booleans
+    st.just = just
+    st.SearchStrategy = SearchStrategy
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, floats=floats,
+    booleans=booleans, just=just, SearchStrategy=SearchStrategy)

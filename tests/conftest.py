@@ -1,9 +1,32 @@
 import os
+import sys
 
-# Smoke tests and benches must see ONE device (the dry-run sets its own
-# XLA_FLAGS before any jax import — never here).
+# Allow running plain `pytest` (CI sets PYTHONPATH=src; this covers the rest).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# Smoke tests and benches run on CPU (the dry-run sets its own platform
+# before any jax import — never here).  The host platform is split into 4
+# virtual devices so the CVEngine mesh tests exercise real shard_map
+# partitioning; single-device tests are unaffected (unsharded arrays live
+# on device 0).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4").strip()
 
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
+
+# Property tests use hypothesis (requirements-dev.txt).  Hermetic containers
+# without it fall back to the deterministic in-repo shim so the tier-1 suite
+# still collects and runs.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()

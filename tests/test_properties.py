@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) for the packing layout and the
+interpolation basis — the two invariants every engine strategy leans on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, picholesky
+
+
+# ---------------------------------------------------------------- packing
+
+
+@given(h=st.integers(2, 96), block=st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip_any_shape(h, block):
+    """unpack(pack(M)) == tril(M) for arbitrary (h, block), including
+    h < block, h == block, and ragged h % block."""
+    m = jnp.asarray(np.random.RandomState(h * 101 + block).randn(h, h))
+    back = packing.unpack_tril(packing.pack_tril(m, block), h, block)
+    np.testing.assert_allclose(np.asarray(back), np.tril(m))
+
+
+@given(h=st.integers(4, 48), block=st.sampled_from([4, 8, 16]),
+       batch=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip_batched(h, block, batch):
+    """The round-trip holds under leading batch dims (the engine packs
+    (g, h, h) factor stacks under vmap over folds)."""
+    m = jnp.asarray(np.random.RandomState(h + block + batch).randn(batch, h, h))
+    v = packing.pack_tril(m, block)
+    assert v.shape == (batch, packing.packed_size(h, block))
+    back = packing.unpack_tril(v, h, block)
+    np.testing.assert_allclose(np.asarray(back), np.tril(np.asarray(m)))
+
+
+@given(h=st.integers(2, 64), block=st.sampled_from([4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_packed_mask_counts_true_entries(h, block):
+    mask = packing.tril_mask_packed(h, block)
+    assert int(mask.sum()) == h * (h + 1) // 2
+
+
+# ------------------------------------------------------------ vandermonde
+
+
+def _spd(h, seed):
+    x = np.random.RandomState(seed).randn(2 * h, h)
+    return jnp.asarray(x.T @ x + h * np.eye(h))
+
+
+@given(degree=st.integers(1, 3), g_extra=st.integers(1, 3),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_fitted_interpolants_basis_equivalence(degree, g_extra, seed):
+    """Monomial and centered Vandermonde bases span the same polynomial
+    space, so the *fitted interpolants* (Algorithm 1 output) must agree at
+    every λ — for any degree and any sample count g > degree."""
+    h = 24
+    hess = _spd(h, seed)
+    g = degree + g_extra
+    sample = picholesky.choose_sample_lambdas(1e-2, 10.0, g)
+    lams = jnp.logspace(-2, 1, 9)
+    m_mono = picholesky.fit(hess, sample, degree, block=8, basis="monomial")
+    m_cent = picholesky.fit(hess, sample, degree, block=8, basis="centered")
+    a = np.asarray(m_mono.eval_factor(lams))
+    b = np.asarray(m_cent.eval_factor(lams))
+    scale = np.max(np.abs(a)) + 1e-30
+    assert np.max(np.abs(a - b)) / scale < 1e-6
+
+
+@given(degree=st.integers(0, 4), seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_vandermonde_columns_are_shifted_powers(degree, seed):
+    lams = jnp.asarray(np.random.RandomState(seed).uniform(0.1, 5.0, size=6))
+    center = float(np.random.RandomState(seed + 1).uniform(0.0, 2.0))
+    v = picholesky.vandermonde(lams, degree, center)
+    assert v.shape == (6, degree + 1)
+    for p in range(degree + 1):
+        np.testing.assert_allclose(np.asarray(v[:, p]),
+                                   (np.asarray(lams) - center) ** p)
+
+
+@given(degree=st.integers(1, 2), seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_interpolation_at_nodes_when_g_equals_degree_plus_one(degree, seed):
+    """g = r+1 makes the least-squares fit an interpolation: exact at the
+    sample nodes regardless of basis."""
+    hess = _spd(16, seed)
+    sample = picholesky.choose_sample_lambdas(1e-1, 1.0, degree + 1)
+    for basis in ("monomial", "centered"):
+        model = picholesky.fit(hess, sample, degree, block=8, basis=basis)
+        for lam in np.asarray(sample):
+            l_i = model.eval_factor(jnp.asarray(lam))
+            l_e = jnp.linalg.cholesky(
+                hess + lam * jnp.eye(16, dtype=hess.dtype))
+            assert float(jnp.max(jnp.abs(l_i - l_e))) < 1e-7
