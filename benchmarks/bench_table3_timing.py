@@ -1,31 +1,37 @@
 """Table 3 / Fig. 6: wall time of the six CV algorithms per fold — plus the
-engine-vs-host comparison the unified sweep exists for.
+engine-vs-host comparison the unified sweep exists for, and the λ-sweep
+scaling record (time + peak memory at q ∈ {100, 1000}) that the packed
+chunked pipeline is accountable to.
 
 On this container the absolute times are CPU seconds; the reproduction
 target is the RELATIVE ordering, the PIChol speedup over Chol
 (paper: ~3.8–4.3× at q=31, g=4), and the CVEngine speedup over the eager
-host drivers (one jitted compiled sweep vs op-by-op tracing per call)."""
+host drivers (one jitted compiled sweep vs op-by-op tracing per call).
+
+Everything measured here is also emitted machine-readably to
+``BENCH_table3.json`` at the repo root (schema ``bench_table3/v1``) so the
+perf trajectory is recorded across PRs; ``REPRO_BENCH_SMOKE=1`` re-emits
+the same schema on tiny problems for CI."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import cv, cv_host, engine
+from repro.core import cv, cv_host, engine, packing
 
-from .common import SIZES, bench_pair, emit, ridge_problem, timeit
+from .common import SIZES, SMOKE, bench_pair, emit, emit_json, ridge_problem, timeit
 
 
-def run():
+def _algo_table(sizes) -> dict:
+    """The per-h six-algorithm table + engine-vs-host pairs (q = 31)."""
     out = {}
-    # the O(d³) factorization term must dominate for the paper's comparison
-    # to be meaningful — use the larger sizes regardless of CI scale
-    sizes = sorted(set(SIZES + [1024]))[-2:]
     for h in sizes:
         x, y = ridge_problem(h)
         folds = cv.make_folds(x, y, 5)
         lams = jnp.logspace(-3, 2, 31)
+        block = max(16, min(64, h // 8))
 
         algos = {
             "chol": lambda: cv.cv_exact_cholesky(folds, lams),
-            "pichol": lambda: cv.cv_picholesky(folds, lams, g=4, block=64),
+            "pichol": lambda: cv.cv_picholesky(folds, lams, g=4, block=block),
             "mchol": lambda: cv.cv_multilevel_cholesky(folds, c=0.0, s=1.5,
                                                        s0=0.1),
             "svd": lambda: cv.cv_svd(folds, lams, mode="full"),
@@ -44,6 +50,7 @@ def run():
             emit(f"table3_{name}_h{h}", t, f"seconds={t:.3f}")
         speedup = times["chol"] / times["pichol"]
         emit(f"table3_speedup_h{h}", 0.0, f"pichol_vs_chol={speedup:.2f}x")
+        times["pichol_vs_chol_speedup"] = speedup
 
         # ---- engine vs host baseline: same math, one jitted sweep vs the
         # eager per-call-traced drivers.  Engines are prebuilt so the
@@ -51,12 +58,12 @@ def run():
         host = {
             "chol": lambda: cv_host.host_cv_exact_cholesky(folds, lams),
             "pichol": lambda: cv_host.host_cv_picholesky(folds, lams, g=4,
-                                                         block=64),
+                                                         block=block),
         }
         engines = {
             "chol": engine.CVEngine("exact"),
             "pichol": engine.CVEngine(engine.PiCholeskyStrategy(g=4,
-                                                                block=64)),
+                                                                block=block)),
         }
         for name in host:
             eng = engines[name]
@@ -64,5 +71,68 @@ def run():
                               lambda: eng.run(folds, lams))
             times[f"host_{name}"] = pair["host"]
             times[f"engine_{name}"] = pair["engine"]
-        out[h] = times
+            times[f"engine_vs_host_{name}"] = pair["speedup"]
+        out[str(h)] = times
     return out
+
+
+def _sweep_scaling(h: int, qs, chunk: int) -> dict:
+    """Engine-vs-host timing and peak-memory of the λ sweep as q grows.
+
+    The host driver materializes the dense (q, h, h) interpolated factor
+    batch; the engine streams λ in `chunk`-sized packed chunks, so its
+    peak should be flat in q (`temp_bytes_chunked`) while the host's and
+    the unchunked engine's grow linearly (`est_dense_bytes`).
+    """
+    x, y = ridge_problem(h)
+    folds = cv.make_folds(x, y, 5)
+    block = max(16, min(64, h // 8))
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=block)  # noqa: E731
+    eng_chunked = engine.CVEngine(strat(), lam_chunk=chunk, donate=False)
+    eng_dense = engine.CVEngine(strat(), lam_chunk=None, donate=False)
+
+    per_lam_packed = packing.packed_size(h, block) * 8
+    record = {"h": h, "chunk": chunk, "block": block,
+              "est_packed_chunk_bytes": chunk * per_lam_packed, "q": {}}
+    for q in qs:
+        lams = jnp.logspace(-3, 2, q)
+        t_host = timeit(lambda: cv_host.host_cv_picholesky(
+            folds, lams, g=4, block=block), repeats=1, warmup=1)
+        t_eng = timeit(lambda: eng_chunked.run(folds, lams),
+                       repeats=1, warmup=1)
+        rec = {
+            "host_s": t_host,
+            "engine_s": t_eng,
+            "engine_vs_host": t_host / t_eng,
+            "temp_bytes_chunked": eng_chunked.sweep_temp_bytes(folds, lams),
+            "temp_bytes_unchunked": eng_dense.sweep_temp_bytes(folds, lams),
+            "est_dense_bytes": q * h * h * 8,
+        }
+        record["q"][str(q)] = rec
+        emit(f"table3_sweep_q{q}_h{h}", t_eng,
+             f"host={t_host:.3f}s engine={t_eng:.3f}s "
+             f"peak_chunked={rec['temp_bytes_chunked']} "
+             f"peak_unchunked={rec['temp_bytes_unchunked']}")
+    return record
+
+
+def run():
+    if SMOKE:
+        sizes, sweep_h, qs, chunk = [32], 32, [10, 25], 4
+    else:
+        # the O(d³) factorization term must dominate for the paper's
+        # comparison to be meaningful — use the larger sizes regardless of
+        # CI scale; the sweep-scaling record needs dense q, not large h
+        sizes = sorted(set(SIZES + [1024]))[-2:]
+        sweep_h, qs, chunk = 128, [100, 1000], 16
+
+    record = {
+        "schema": "bench_table3/v1",
+        "smoke": SMOKE,
+        "jax_backend": jax.default_backend(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "sizes": _algo_table(sizes),
+        "sweep_scaling": _sweep_scaling(sweep_h, qs, chunk),
+    }
+    emit_json("BENCH_table3.json", record)
+    return record

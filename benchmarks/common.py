@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: timing, CSV emission, problem construction."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, problem construction."""
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import time
 from typing import Callable
 
@@ -13,6 +15,10 @@ import jax.numpy as jnp
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "ci")
 SIZES = {"ci": [256, 512], "mid": [512, 1024, 2048],
          "paper": [1024, 2048, 4096]}[SCALE]
+
+# REPRO_BENCH_SMOKE=1: tiny problems, one repeat — CI runs this to catch
+# schema drift in the emitted JSON records, not to measure anything.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
@@ -30,6 +36,18 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def emit_json(filename: str, record: dict) -> pathlib.Path:
+    """Write a machine-readable benchmark record to the repo root.
+
+    The perf trajectory lives in these committed files; smoke-mode CI
+    re-emits them on tiny problems so schema drift fails fast.
+    """
+    path = pathlib.Path(__file__).resolve().parents[1] / filename
+    path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    emit(f"json_{filename}", 0.0, f"path={path}")
+    return path
 
 
 def ridge_problem(h: int, n: int | None = None, seed: int = 0):

@@ -2,8 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.run [names...]
 
-Prints ``name,us_per_call,derived`` CSV rows.  REPRO_BENCH_SCALE=ci|mid|paper
-controls problem sizes (ci default on this CPU container).
+Prints ``name,us_per_call,derived`` CSV rows; benches with a machine-readable
+record (currently ``table3`` → ``BENCH_table3.json``) also write it to the
+repo root so the perf trajectory is committed alongside the code.
+
+Environment: REPRO_BENCH_SCALE=ci|mid|paper controls problem sizes (ci
+default on this CPU container); REPRO_BENCH_SMOKE=1 shrinks everything to
+seconds-scale so CI can validate the emitted JSON schema on every push.
 """
 import sys
 
@@ -24,7 +29,6 @@ BENCHES = {
     "fig11": bench_fig11_nrmse.run,
     "roofline": bench_roofline.run,
 }
-
 
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)

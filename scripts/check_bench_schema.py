@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Validate the schema of the emitted BENCH_*.json records.
+
+CI runs the benches in smoke mode (REPRO_BENCH_SMOKE=1) and then this
+script, so a bench refactor that silently changes the machine-readable
+record — the committed perf trajectory — fails fast instead of producing
+an artifact later PRs cannot compare against.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+SWEEP_Q_KEYS = {"host_s", "engine_s", "engine_vs_host",
+                "temp_bytes_chunked", "temp_bytes_unchunked",
+                "est_dense_bytes"}
+
+
+def check_table3(path: pathlib.Path) -> list[str]:
+    errors = []
+    rec = json.loads(path.read_text())
+    if rec.get("schema") != "bench_table3/v1":
+        errors.append(f"schema: expected bench_table3/v1, got {rec.get('schema')!r}")
+    for key in ("sizes", "sweep_scaling", "jax_backend", "x64", "smoke"):
+        if key not in rec:
+            errors.append(f"missing top-level key {key!r}")
+    for h, times in rec.get("sizes", {}).items():
+        for algo in ("chol", "pichol", "host_pichol", "engine_pichol",
+                     "pichol_vs_chol_speedup", "engine_vs_host_pichol"):
+            if algo not in times:
+                errors.append(f"sizes[{h}] missing {algo!r}")
+    sweep = rec.get("sweep_scaling", {})
+    for key in ("h", "chunk", "block", "est_packed_chunk_bytes", "q"):
+        if key not in sweep:
+            errors.append(f"sweep_scaling missing {key!r}")
+    if not sweep.get("q"):
+        errors.append("sweep_scaling.q is empty")
+    for q, qrec in sweep.get("q", {}).items():
+        missing = SWEEP_Q_KEYS - qrec.keys()
+        if missing:
+            errors.append(f"sweep_scaling.q[{q}] missing {sorted(missing)}")
+    return errors
+
+
+def main() -> int:
+    path = ROOT / "BENCH_table3.json"
+    if not path.exists():
+        print(f"FAIL: {path} not found (run `python -m benchmarks.run table3`)")
+        return 1
+    errors = check_table3(path)
+    for e in errors:
+        print(f"FAIL: BENCH_table3.json: {e}")
+    if not errors:
+        print("BENCH_table3.json schema OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ Kernel imports happen lazily inside the Pallas methods so importing
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Union
 
 import jax
@@ -32,7 +33,15 @@ __all__ = ["LinalgBackend", "ReferenceBackend", "PallasBackend",
 
 
 class LinalgBackend:
-    """Interface shared by both backends (duck-typed, no ABC machinery)."""
+    """Interface shared by both backends (duck-typed, no ABC machinery).
+
+    Two groups of methods: the dense surface (``cholesky`` / ``solve_lower``
+    / ``solve_from_factor`` / ``pack_tril`` / ``unpack_tril``) and the
+    packed-domain surface (``solve_packed`` / ``interp_solve`` /
+    ``interp_factors``), which consumes the tile-packed ``(P,)`` layout
+    directly so factors never round-trip through a dense ``(h, h)`` buffer
+    on the sweep hot path.
+    """
 
     name: str = "abstract"
 
@@ -43,8 +52,15 @@ class LinalgBackend:
                     transpose: bool = False) -> jax.Array:
         raise NotImplementedError
 
-    def solve_from_factor(self, l: jax.Array, g: jax.Array) -> jax.Array:
-        """L Lᵀ θ = g via forward + back substitution."""
+    def solve_from_factor(self, l, g: jax.Array) -> jax.Array:
+        """L Lᵀ θ = g via forward + back substitution.
+
+        ``l`` may be a dense factor or a :class:`~repro.core.packing.PackedFactor`
+        (dispatched to :meth:`solve_packed` — no unpack).
+        """
+        from .packing import PackedFactor
+        if isinstance(l, PackedFactor):
+            return self.solve_packed(l, g)
         w = self.solve_lower(l, g)
         return self.solve_lower(l, w, transpose=True)
 
@@ -52,6 +68,24 @@ class LinalgBackend:
         raise NotImplementedError
 
     def unpack_tril(self, vec: jax.Array, h: int, block: int) -> jax.Array:
+        raise NotImplementedError
+
+    # -- packed-domain surface (the factor pipeline's native currency) -----
+
+    def solve_packed(self, pf, g: jax.Array) -> jax.Array:
+        """L Lᵀ θ = g directly on the tile-packed factor (no dense L)."""
+        raise NotImplementedError
+
+    def interp_solve(self, theta: jax.Array, lams: jax.Array, g: jax.Array,
+                     *, h: int, block: int, center=0.0) -> jax.Array:
+        """Fused interpolant evaluation + substitution at a λ chunk:
+        (q, h) solutions with no (q, h, h) — or even (q, P) on the kernel
+        path — intermediate."""
+        raise NotImplementedError
+
+    def interp_factors(self, theta: jax.Array, lams: jax.Array,
+                       *, h: int, block: int, center=0.0) -> jax.Array:
+        """Dense interpolated factors (q, h, h) — debug / dense consumers."""
         raise NotImplementedError
 
 
@@ -79,14 +113,43 @@ class ReferenceBackend(LinalgBackend):
         from . import packing
         return packing.unpack_tril(vec, h, block)
 
+    def solve_packed(self, pf, g):
+        from . import packing
+        fn = functools.partial(packing.solve_packed_ref,
+                               h=pf.h, block=pf.block)
+        for _ in range(pf.vec.ndim - 1):   # batched factors via vmap
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn(pf.vec, g)
+
+    def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+        from . import packing, picholesky
+        model = picholesky.PiCholesky(
+            theta=theta, center=jnp.asarray(center, theta.dtype),
+            h=h, block=block)
+        vecs = model.eval_packed(jnp.atleast_1d(lams))   # (q, P) — no dense L
+        return jax.vmap(lambda v: packing.solve_packed_ref(
+            v, g.astype(theta.dtype), h, block))(vecs)
+
+    def interp_factors(self, theta, lams, *, h, block, center=0.0):
+        from . import picholesky
+        model = picholesky.PiCholesky(
+            theta=theta, center=jnp.asarray(center, theta.dtype),
+            h=h, block=block)
+        return self.unpack_tril(model.eval_packed(jnp.atleast_1d(lams)),
+                                h, block)
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(LinalgBackend):
-    """Pallas kernel path: blocked Cholesky, blocked trsm, tile pack/unpack.
+    """Pallas kernel path: blocked Cholesky/trsm, tile pack/unpack, and the
+    packed-domain kernels (packed trsm, fused Horner interp-solve/unpack).
 
-    ``chol_block`` / ``trsm_block`` are the kernel tile sizes (MXU-sized on
-    real TPUs, small in CPU interpret-mode tests); ``pack_block`` must match
-    the packing layout the caller uses elsewhere.
+    ``chol_block`` / ``trsm_block`` are the *kernel* tile sizes (MXU-sized
+    on real TPUs, small in CPU interpret-mode tests).  The packed *layout*
+    block is always carried by the data (``pack_tril(mat, block)`` /
+    :class:`~repro.core.packing.PackedFactor.block`), never by the backend;
+    :func:`resolve_backend` sizes all kernel tiles from one ``block=`` so
+    the pack/unpack layout and the compute kernels stay consistent.
     """
 
     name: str = "pallas"
@@ -123,6 +186,24 @@ class PallasBackend(LinalgBackend):
             fn = jax.vmap(fn)
         return fn(vec)
 
+    def solve_packed(self, pf, g):
+        from repro.kernels.packed_trsm import solve_packed
+
+        fn = functools.partial(solve_packed, h=pf.h, block=pf.block)
+        for _ in range(pf.vec.ndim - 1):
+            fn = jax.vmap(fn, in_axes=(0, None))
+        return fn(pf.vec, g)
+
+    def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+        from repro.kernels.poly_interp import interp_solve
+        return interp_solve(theta, jnp.atleast_1d(lams), g, h, block,
+                            center=center)
+
+    def interp_factors(self, theta, lams, *, h, block, center=0.0):
+        from repro.kernels.poly_interp import interp_factors
+        return interp_factors(theta, jnp.atleast_1d(lams), h, block,
+                              center=center)
+
 
 BackendLike = Union[None, str, LinalgBackend]
 
@@ -131,9 +212,13 @@ def resolve_backend(backend: BackendLike = None, *,
                     block: int | None = None) -> LinalgBackend:
     """Map a ``backend=`` argument to a concrete :class:`LinalgBackend`.
 
-    ``block`` (when given) sizes the Pallas kernel tiles — callers running
-    small test problems pass their packing block so interpret-mode kernels
-    stay proportionate.
+    ``block`` (when given) sizes **all** Pallas kernel tiles
+    (``chol_block`` and ``trsm_block``) from the one value callers use as
+    their packing-layout block — so small test problems get proportionate
+    interpret-mode kernels and the pack/unpack layout never disagrees with
+    the compute tiles.  The packed-domain kernels take their tile size from
+    the data's own layout block (:class:`~repro.core.packing.PackedFactor`),
+    which is consistent by construction.
     """
     if isinstance(backend, LinalgBackend):
         return backend

@@ -13,6 +13,12 @@ This module runs the whole grid as **one jitted computation**:
   :mod:`repro.distributed.sharding`),
 * the per-fold training Hessians are donated into the sweep so the largest
   intermediate (k × h × h) never holds two copies in HBM,
+* the λ axis is **streamed**: each device's λ shard is processed in
+  fixed-size chunks under an outer ``lax.map`` (``lam_chunk=``, default
+  VMEM-sized), and the interpolant strategies solve each chunk in the
+  tile-packed domain (:class:`~repro.core.packing.PackedFactor` currency,
+  fused Horner + packed trsm) — peak sweep memory is O(chunk · P),
+  independent of the grid size q,
 * all linear algebra goes through one ``backend=`` switch
   (:mod:`repro.core.backends`): Pallas kernels on TPU, ``jnp.linalg``
   elsewhere.
@@ -50,7 +56,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed import sharding as shardlib
 
-from . import picholesky, solvers
+from . import packing, picholesky, solvers
 from .backends import BackendLike, LinalgBackend, resolve_backend
 from .folds import CVResult, FoldData, holdout_nrmse
 
@@ -129,12 +135,14 @@ class ExactCholesky(StrategyBase):
 
 
 class _InterpolantErrors:
-    """Shared λ-stage for the piCholesky family: evaluate the fitted
-    interpolant at the local λ chunk, substitute, score."""
+    """Shared λ-stage for the piCholesky family: fused interpolant
+    evaluation + substitution at the local λ chunk, entirely in the packed
+    domain — no (q_loc, h, h) factor batch is ever materialized (the
+    pre-packed-pipeline eval_factor → dense-trsm route survives only as the
+    ``PiCholesky.eval_factor`` debug escape hatch)."""
 
     def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
-        l_interp = state.eval_factor(lams, backend=bk)       # (q_loc, h, h)
-        thetas = jax.vmap(lambda l: bk.solve_from_factor(l, g_tr_f))(l_interp)
+        thetas = state.solve(lams, g_tr_f, backend=bk)       # (q_loc, h)
         return _errors_from_thetas(thetas, x_f, y_f)
 
 
@@ -321,6 +329,12 @@ def make_strategy(name: str, **params) -> CVStrategy:
 MeshLike = Union[None, str, Mesh]
 
 
+#: HBM/VMEM budget (bytes) the ``lam_chunk='auto'`` heuristic sizes the
+#: per-chunk packed-factor working set against — one VMEM's worth, so the
+#: streamed sweep's λ-dependent footprint matches what a TPU core can hold.
+LAM_CHUNK_BUDGET_BYTES = 16 * 1024 * 1024
+
+
 @dataclasses.dataclass
 class CVEngine:
     """Batched/sharded k-fold × λ sweep runner.
@@ -336,6 +350,14 @@ class CVEngine:
     donate:    donate the per-fold training Hessians into the jitted sweep
                (``None`` = on except on CPU, where XLA cannot alias).
     block:     Pallas kernel tile size override for small test problems.
+    lam_chunk: λ-axis streaming: the per-device λ shard is processed in
+               fixed-size chunks under an outer ``lax.map``, so the sweep's
+               peak memory is O(chunk · P) regardless of the grid size q.
+               ``'auto'`` (default) sizes the chunk so one chunk's packed
+               factors fit :data:`LAM_CHUNK_BUDGET_BYTES`; an ``int`` fixes
+               it; ``None`` disables streaming (whole shard in one call).
+               Requires ``fold_errors`` to be λ-elementwise — true of every
+               built-in strategy (each λ's solve/score is independent).
     """
 
     strategy: Union[CVStrategy, str]
@@ -343,6 +365,7 @@ class CVEngine:
     mesh: MeshLike = None
     donate: Optional[bool] = None
     block: Optional[int] = None
+    lam_chunk: Union[None, int, str] = "auto"
 
     def __post_init__(self):
         if isinstance(self.strategy, str):
@@ -367,18 +390,51 @@ class CVEngine:
             return shardlib.make_cv_mesh(k)
         raise ValueError(f"mesh must be None, 'auto' or a Mesh; got {self.mesh!r}")
 
+    # -- λ chunking --------------------------------------------------------
+
+    def _resolve_chunk(self, q_loc: int, h: int, dtype) -> Optional[int]:
+        """Static chunk size for a (q_loc,) λ shard, or None (no streaming)."""
+        if self.lam_chunk is None:
+            return None
+        if self.lam_chunk == "auto":
+            block = getattr(self.strategy, "block", None) or self.block or 128
+            per_lam = packing.packed_size(h, block) * jnp.dtype(dtype).itemsize
+            return max(1, int(LAM_CHUNK_BUDGET_BYTES // per_lam))
+        chunk = int(self.lam_chunk)
+        if chunk <= 0:
+            raise ValueError(f"lam_chunk must be positive, got {chunk}")
+        return chunk
+
     # -- sweep construction ----------------------------------------------
 
     def _core(self, h_tr, g_tr, x_folds, y_folds, f_idx, lams, aux):
-        """(k_loc folds) × (q_loc λs) error grid — runs per device shard."""
+        """(k_loc folds) × (q_loc λs) error grid — runs per device shard.
+
+        The λ axis is streamed in fixed-size chunks (``lam_chunk``) under a
+        sequential ``lax.map``: only one chunk's interpolants/factors are
+        live at a time, so peak memory is O(chunk · P) however dense the
+        grid.  Composes with the folds × lams ``shard_map``: chunking
+        happens per device on the local λ shard.
+        """
         strat, bk = self.strategy, self._bk
         state = jax.vmap(
             lambda f, h, g: strat.fold_state(f, h, g, aux, bk)
         )(f_idx, h_tr, g_tr)
-        return jax.vmap(
-            lambda st, f, h, g, x, y: strat.fold_errors(
-                st, f, h, g, x, y, lams, aux, bk)
-        )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
+
+        def errors_at(lams_c):
+            return jax.vmap(
+                lambda st, f, h, g, x, y: strat.fold_errors(
+                    st, f, h, g, x, y, lams_c, aux, bk)
+            )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
+
+        q_loc = lams.shape[0]
+        chunk = self._resolve_chunk(q_loc, h_tr.shape[-1], h_tr.dtype)
+        if chunk is None or chunk >= q_loc:
+            return errors_at(lams)
+        chunks, _ = shardlib.chunk_lams(lams, chunk)    # (n_c, chunk)
+        errs = jax.lax.map(errors_at, chunks)           # (n_c, k_loc, chunk)
+        k_loc = h_tr.shape[0]
+        return jnp.moveaxis(errs, 1, 0).reshape(k_loc, -1)[:, :q_loc]
 
     def _build_sweep(self, mesh: Optional[Mesh]):
         strat, bk = self.strategy, self._bk
@@ -413,6 +469,22 @@ class CVEngine:
 
     # -- public API -------------------------------------------------------
 
+    def sweep_temp_bytes(self, folds: FoldData, lams: jax.Array) -> int:
+        """Live-buffer proxy for the jitted (unsharded) sweep: XLA temp
+        allocation in bytes, excluding inputs/outputs.
+
+        This is the measurable form of the O(chunk · P) memory contract —
+        the packed-pipeline acceptance test and the committed
+        ``BENCH_table3.json`` record both read it, so there is exactly one
+        definition of "the sweep's peak memory".
+        """
+        lams = jnp.asarray(lams)
+        h_tr, g_tr = self._split(folds.hess, folds.grad, folds.fold_hess,
+                                 folds.fold_grad)
+        lowered = self._sweep_fn(None).lower(h_tr, g_tr, folds.x_folds,
+                                             folds.y_folds, lams)
+        return int(lowered.compile().memory_analysis().temp_size_in_bytes)
+
     def run(self, folds: FoldData, lams: jax.Array) -> CVResult:
         lams = jnp.asarray(lams)
         k = folds.fold_hess.shape[0]
@@ -440,4 +512,4 @@ class CVEngine:
             engine=dict(
                 strategy=self.strategy.name, backend=self._bk.name,
                 mesh=None if mesh is None else dict(mesh.shape),
-                donated=bool(self.donate)))
+                donated=bool(self.donate), lam_chunk=self.lam_chunk))

@@ -19,6 +19,7 @@ Pallas kernel with the same layout.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -29,12 +30,18 @@ import numpy as np
 __all__ = [
     "num_tiles",
     "tile_index_pairs",
+    "tile_pos_map",
+    "column_starts",
     "packed_size",
     "pack_tril",
     "unpack_tril",
     "pack_tril_rowwise",
     "pack_tril_full",
     "tril_mask_packed",
+    "PackedFactor",
+    "invert_diag_tiles",
+    "solve_lower_packed",
+    "solve_packed_ref",
 ]
 
 
@@ -58,6 +65,35 @@ def tile_index_pairs(h: int, block: int) -> Tuple[np.ndarray, np.ndarray]:
             ii.append(i)
             jj.append(j)
     return np.asarray(ii, dtype=np.int32), np.asarray(jj, dtype=np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def tile_pos_map(h: int, block: int) -> np.ndarray:
+    """(nt, nt) dense-tile → packed-tile index map; 0 for upper (unused) tiles.
+
+    The 0 sentinel aliases the (0, 0) diagonal tile — callers must mask
+    upper positions before use (every consumer walks only ``i ≥ j``).
+    """
+    nt = num_tiles(h, block)
+    ii, jj = tile_index_pairs(h, block)
+    pmap = np.zeros((nt, nt), np.int32)
+    for p, (i, j) in enumerate(zip(ii, jj)):
+        pmap[i, j] = p
+    return pmap
+
+
+@functools.lru_cache(maxsize=None)
+def column_starts(h: int, block: int) -> np.ndarray:
+    """Packed index of the *diagonal* tile of each tile column.
+
+    Column ``j`` of the tile-column-major layout is the contiguous run of
+    tiles ``(j, j), (j+1, j), …, (nt−1, j)`` starting at
+    ``j·nt − j(j−1)/2`` — the property that lets the packed triangular
+    solves walk panels with plain slices.
+    """
+    nt = num_tiles(h, block)
+    j = np.arange(nt, dtype=np.int64)
+    return (j * nt - j * (j - 1) // 2).astype(np.int32)
 
 
 def packed_size(h: int, block: int) -> int:
@@ -160,3 +196,119 @@ def pack_tril_full(mat: jax.Array) -> jax.Array:
 def tril_mask_packed(h: int, block: int = 128, dtype=jnp.float32) -> jax.Array:
     """Mask of 'real' (non-padding) entries in the tile-packed layout."""
     return pack_tril(jnp.ones((h, h), dtype), block)
+
+
+# --------------------------------------------------------- packed currency
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedFactor:
+    """A Cholesky factor that lives in the tile-packed ``(…, P)`` layout.
+
+    The native currency of the factor pipeline: ``PiCholesky.fit`` packs
+    once, interpolation and the triangular solves consume the packed vector
+    directly, and nothing on the hot path materializes the dense ``(h, h)``
+    matrix.  ``dense()`` is the explicit debug escape hatch.
+    """
+
+    vec: jax.Array
+    h: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nt(self) -> int:
+        return num_tiles(self.h, self.block)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.nt * (self.nt + 1) // 2
+
+    @classmethod
+    def from_dense(cls, mat: jax.Array, block: int = 128) -> "PackedFactor":
+        return cls(vec=pack_tril(mat, block), h=mat.shape[-1], block=block)
+
+    def tiles(self) -> jax.Array:
+        """(…, n_blocks, B, B) view of the packed tiles."""
+        lead = self.vec.shape[:-1]
+        return self.vec.reshape(*lead, -1, self.block, self.block)
+
+    def dense(self) -> jax.Array:
+        """Debug escape hatch: materialize the dense factor (…, h, h)."""
+        return unpack_tril(self.vec, self.h, self.block)
+
+
+@functools.lru_cache(maxsize=None)
+def _identity_tail(h: int, block: int) -> np.ndarray:
+    """(B, B) identity on the padding rows of the last diagonal tile — the
+    one rule making padded block solves nonsingular when h % block ≠ 0
+    (all-zero when there is no padding).  Shared by every packed solver."""
+    pad = num_tiles(h, block) * block - h
+    tail = np.zeros((block, block), np.float64)
+    if pad:
+        idx = np.arange(block - pad, block)
+        tail[idx, idx] = 1.0
+    return tail
+
+
+def _diag_tiles(tiles: jax.Array, h: int, block: int) -> jax.Array:
+    """(nt, B, B) diagonal tiles, identity-padded via :func:`_identity_tail`."""
+    nt = num_tiles(h, block)
+    diag = tiles[..., column_starts(h, block), :, :]
+    tail = _identity_tail(h, block)
+    if tail.any():
+        diag = diag.at[..., nt - 1, :, :].add(jnp.asarray(tail, diag.dtype))
+    return diag
+
+
+def invert_diag_tiles(diag: jax.Array) -> jax.Array:
+    """Pre-invert lower-triangular diagonal tiles (…, B, B).
+
+    Shared by the packed trsm and fused interp-solve kernels; one inversion
+    serves both sweeps since ``inv(L_jj)ᵀ = inv(L_jjᵀ)``.
+    """
+    b = diag.shape[-1]
+    eye = jnp.eye(b, dtype=diag.dtype)
+    return jax.lax.linalg.triangular_solve(
+        diag, jnp.broadcast_to(eye, diag.shape), left_side=True, lower=True)
+
+
+def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int, *,
+                       transpose: bool = False) -> jax.Array:
+    """Solve ``L w = g`` (or ``Lᵀ w = g``) from the tile-packed factor.
+
+    Pure-jnp reference for :mod:`repro.kernels.packed_trsm`: walks the
+    tile-column-major panels (column sweep forward, reverse column sweep for
+    the transpose — column ``i`` of packed ``L`` holds exactly row ``i`` of
+    ``Lᵀ``) without ever unpacking the dense matrix.  ``g``: (h,) or (h, q).
+    """
+    nt = num_tiles(h, block)
+    hp = nt * block
+    squeeze = g.ndim == 1
+    g2 = (g[:, None] if squeeze else g).astype(vec.dtype)
+    if hp != h:
+        g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
+    tiles = vec.reshape(-1, block, block)
+    pmap = tile_pos_map(h, block)
+    diag = _diag_tiles(tiles, h, block)
+
+    w = [None] * nt
+    order = range(nt - 1, -1, -1) if transpose else range(nt)
+    for i in order:
+        acc = g2[i * block:(i + 1) * block]
+        if transpose:      # row i of Lᵀ = column i of packed L, transposed
+            for t in range(i + 1, nt):
+                acc = acc - tiles[pmap[t, i]].T @ w[t]
+        else:
+            for j in range(i):
+                acc = acc - tiles[pmap[i, j]] @ w[j]
+        w[i] = jax.lax.linalg.triangular_solve(
+            diag[i], acc, left_side=True, lower=True, transpose_a=transpose)
+    out = jnp.concatenate(w, axis=0)[:h]
+    return out[:, 0] if squeeze else out
+
+
+def solve_packed_ref(vec: jax.Array, g: jax.Array, h: int, block: int) -> jax.Array:
+    """L Lᵀ θ = g entirely in the packed domain (forward + back sweep)."""
+    w = solve_lower_packed(vec, g, h, block)
+    return solve_lower_packed(vec, w, h, block, transpose=True)

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from . import packing
 from .backends import BackendLike, resolve_backend
 
-__all__ = ["PiCholesky", "fit", "evaluate", "vandermonde", "choose_sample_lambdas"]
+__all__ = ["PiCholesky", "fit", "evaluate", "evaluate_packed", "vandermonde",
+           "choose_sample_lambdas"]
 
 
 def vandermonde(lams: jax.Array, degree: int, center: float | jax.Array = 0.0) -> jax.Array:
@@ -48,7 +49,11 @@ def choose_sample_lambdas(lo: float, hi: float, g: int, spacing: str = "log") ->
 @dataclasses.dataclass
 class PiCholesky:
     """Fitted interpolant. ``theta``: (r+1, P) coefficients over the packed
-    layout; evaluation returns either packed vectors or unpacked factors."""
+    layout.  The packed ``(P,)`` representation is the pipeline's native
+    currency: :meth:`eval_packed` / :meth:`eval_packed_factor` stay in it
+    and :meth:`solve` fuses evaluation with the substitution, so the λ
+    sweep never materializes dense factors; :meth:`eval_factor` is the
+    explicit dense escape hatch for debugging and dense consumers."""
 
     theta: jax.Array
     center: jax.Array
@@ -73,11 +78,32 @@ class PiCholesky:
         acc, _ = jax.lax.scan(horner, acc, self.theta[::-1])
         return acc[0] if scalar else acc
 
+    def eval_packed_factor(self, lam: jax.Array) -> "packing.PackedFactor":
+        """Interpolated factor(s) in the packed layout: vec is (…, P)."""
+        return packing.PackedFactor(vec=self.eval_packed(lam), h=self.h,
+                                    block=self.block)
+
+    def solve(self, lam: jax.Array, g: jax.Array,
+              backend: BackendLike = "reference") -> jax.Array:
+        """θ(λ) = (H + λI)⁻¹ g for a λ chunk via the fused packed pipeline:
+        Horner evaluation + forward/back substitution with no dense L(λ)."""
+        return resolve_backend(backend).interp_solve(
+            self.theta, lam, g, h=self.h, block=self.block,
+            center=self.center)
+
     def eval_factor(self, lam: jax.Array,
                     backend: BackendLike = "reference") -> jax.Array:
-        """Interpolated lower-triangular factor(s) L(λ): (…, h, h)."""
-        return resolve_backend(backend).unpack_tril(
-            self.eval_packed(lam), self.h, self.block)
+        """Dense interpolated factor(s) L(λ): (…, h, h).
+
+        Debug escape hatch — the sweep hot path uses :meth:`solve` /
+        :meth:`eval_packed_factor` instead.  On the Pallas backend this is
+        the fused Horner+unpack kernel (one pass over Θ), not the two-pass
+        eval_packed → unpack_tril route.
+        """
+        lam = jnp.asarray(lam)
+        out = resolve_backend(backend).interp_factors(
+            self.theta, lam, h=self.h, block=self.block, center=self.center)
+        return out[0] if lam.ndim == 0 else out
 
 
 def fit(
@@ -88,14 +114,16 @@ def fit(
     block: int = 128,
     basis: str = "monomial",
     chol_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
-    factors: Optional[jax.Array] = None,
+    factors: "jax.Array | packing.PackedFactor | None" = None,
     backend: BackendLike = "reference",
 ) -> PiCholesky:
     """Algorithm 1.  ``hessian``: (h, h) SPD; ``sample_lams``: (g,) with
     g > degree.  ``backend`` selects the factorize/pack implementation
     (Pallas kernels vs ``jnp.linalg``); ``chol_fn`` overrides just the
-    factorization; ``factors`` (g, h, h) skips factorization if the caller
-    already has L^s.
+    factorization; ``factors`` skips factorization if the caller already
+    has L^s — either dense (g, h, h) or a
+    :class:`~repro.core.packing.PackedFactor` with batched vec (g, P),
+    which is consumed without any unpack.
     """
     h = hessian.shape[-1]
     g = sample_lams.shape[0]
@@ -104,12 +132,19 @@ def fit(
     bk = resolve_backend(backend)
     chol_fn = chol_fn or bk.cholesky
 
-    if factors is None:
-        eye = jnp.eye(h, dtype=hessian.dtype)
-        factors = jax.vmap(lambda lam: chol_fn(hessian + lam * eye))(sample_lams)
-
-    # Step 2: tile-packed target matrix T (g × P) — aligned BLAS-3 layout.
-    targets = bk.pack_tril(factors, block)
+    if isinstance(factors, packing.PackedFactor):
+        if factors.block != block or factors.h != h:
+            raise ValueError(
+                f"packed factors have (h={factors.h}, block={factors.block}); "
+                f"fit called with (h={h}, block={block})")
+        targets = factors.vec
+    else:
+        if factors is None:
+            eye = jnp.eye(h, dtype=hessian.dtype)
+            factors = jax.vmap(lambda lam: chol_fn(hessian + lam * eye)
+                               )(sample_lams)
+        # Step 2: tile-packed target matrix T (g × P) — aligned BLAS-3 layout.
+        targets = bk.pack_tril(factors, block)
 
     center = jnp.mean(sample_lams) if basis == "centered" else jnp.zeros((), sample_lams.dtype)
     v = vandermonde(sample_lams, degree, center).astype(targets.dtype)
@@ -121,6 +156,12 @@ def fit(
     return PiCholesky(theta=theta, center=center.astype(targets.dtype), h=h, block=block)
 
 
+def evaluate_packed(model: PiCholesky, lams: jax.Array) -> "packing.PackedFactor":
+    """Interpolated factors at a dense λ grid, still tile-packed: (q, P)."""
+    return model.eval_packed_factor(lams)
+
+
 def evaluate(model: PiCholesky, lams: jax.Array) -> jax.Array:
-    """Convenience: interpolated factors at a dense λ grid, (q, h, h)."""
+    """Dense interpolated factors (q, h, h) — debug escape hatch; the sweep
+    path consumes :func:`evaluate_packed` / :meth:`PiCholesky.solve`."""
     return model.eval_factor(lams)

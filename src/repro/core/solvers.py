@@ -21,6 +21,8 @@ from .backends import BackendLike, resolve_backend
 
 __all__ = [
     "solve_from_factor",
+    "solve_packed",
+    "solve_interpolant_sweep",
     "solve_cholesky",
     "solve_cholesky_sweep",
     "svd_ridge_factors",
@@ -32,10 +34,29 @@ __all__ = [
 ]
 
 
-def solve_from_factor(l: jax.Array, g: jax.Array,
+def solve_from_factor(l, g: jax.Array,
                       backend: BackendLike = "reference") -> jax.Array:
-    """Forward + back substitution: solve L Lᵀ θ = g (§3.2)."""
+    """Forward + back substitution: solve L Lᵀ θ = g (§3.2).
+
+    ``l``: dense (h, h) factor or a
+    :class:`~repro.core.packing.PackedFactor` (solved in the packed domain,
+    no unpack).
+    """
     return resolve_backend(backend).solve_from_factor(l, g)
+
+
+def solve_packed(pf, g: jax.Array,
+                 backend: BackendLike = "reference") -> jax.Array:
+    """Packed-domain solve: L Lᵀ θ = g on tile-packed factor(s) (…, P)."""
+    return resolve_backend(backend).solve_packed(pf, g)
+
+
+def solve_interpolant_sweep(model, lams: jax.Array, g: jax.Array,
+                            backend: BackendLike = "reference") -> jax.Array:
+    """θ(λ) for a λ chunk straight from a fitted
+    :class:`~repro.core.picholesky.PiCholesky`: fused Horner evaluation +
+    packed substitution, no (q, h, h) intermediate.  (q, h)."""
+    return model.solve(lams, g, backend=backend)
 
 
 def solve_cholesky(hessian: jax.Array, g: jax.Array, lam: jax.Array,

@@ -19,7 +19,7 @@ from repro.models.params import Spec
 
 __all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
            "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
-           "pad_to_multiple"]
+           "pad_to_multiple", "chunk_lams"]
 
 
 def spec_pspec(spec: Spec, ctx) -> P:
@@ -100,3 +100,18 @@ def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, mode="edge"), n
+
+
+def chunk_lams(lams: jax.Array, chunk: int):
+    """Reshape a (local) λ grid into fixed-size chunks for the streamed
+    sweep: (q,) → ((q_pad // chunk), chunk) plus the original length.
+
+    Edge-padding keeps the padded tail numerically benign (repeats the last
+    λ — an SPD shift that always factorizes); ``chunk > q`` degenerates to
+    one padded chunk.  Composes with the λ-axis ``shard_map`` padding: that
+    one runs on the global grid, this one on the per-device shard.
+    """
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    padded, n = pad_to_multiple(lams, chunk)
+    return padded.reshape(-1, chunk), n

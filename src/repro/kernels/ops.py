@@ -10,10 +10,13 @@ import os
 
 import jax
 
-from . import chol_blocked, poly_interp, ref, ssm_scan as ssm_scan_mod, tri_pack, trsm
+from . import (chol_blocked, packed_trsm, poly_interp, ref,
+               ssm_scan as ssm_scan_mod, tri_pack, trsm)
 
 __all__ = ["kernel_backend", "pack_tril", "unpack_tril", "cholesky",
-           "interp_factors", "solve_lower", "solve_factor_sweep", "ssm_scan"]
+           "interp_factors", "interp_solve", "solve_lower",
+           "solve_lower_packed", "solve_packed", "solve_factor_sweep",
+           "ssm_scan"]
 
 
 def kernel_backend() -> str:
@@ -48,6 +51,26 @@ def solve_lower(l, g, block: int = 256, *, transpose: bool = False):
     if kernel_backend() == "ref":
         return ref.solve_lower(l, g, transpose=transpose)
     return trsm.solve_lower_blocked(l, g, block, transpose=transpose)
+
+
+def solve_lower_packed(vec, g, h: int, block: int = 128, *,
+                       transpose: bool = False):
+    if kernel_backend() == "ref":
+        return ref.solve_lower_packed(vec, g, h, block, transpose=transpose)
+    return packed_trsm.solve_lower_packed(vec, g, h, block,
+                                          transpose=transpose)
+
+
+def solve_packed(vec, g, h: int, block: int = 128):
+    if kernel_backend() == "ref":
+        return ref.solve_packed(vec, g, h, block)
+    return packed_trsm.solve_packed(vec, g, h, block)
+
+
+def interp_solve(theta, lams, g, h: int, block: int = 128, center=0.0):
+    if kernel_backend() == "ref":
+        return ref.interp_solve(theta, lams, g, h, block, center)
+    return poly_interp.interp_solve(theta, lams, g, h, block, center=center)
 
 
 def solve_factor_sweep(ls, g, block: int = 256):

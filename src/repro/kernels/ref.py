@@ -11,7 +11,8 @@ import jax.numpy as jnp
 from repro.core import packing, picholesky
 
 __all__ = ["pack_tril", "unpack_tril", "cholesky", "interp_factors",
-           "solve_lower", "solve_factor_sweep", "ssm_scan"]
+           "solve_lower", "solve_factor_sweep", "solve_lower_packed",
+           "solve_packed", "interp_solve", "ssm_scan"]
 
 
 def pack_tril(mat: jax.Array, block: int) -> jax.Array:
@@ -47,6 +48,27 @@ def solve_factor_sweep(ls: jax.Array, g: jax.Array) -> jax.Array:
         return solve_lower(l, w, transpose=True)
 
     return jax.vmap(one)(ls)
+
+
+def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int, *,
+                       transpose: bool = False) -> jax.Array:
+    return packing.solve_lower_packed(vec, g, h, block, transpose=transpose)
+
+
+def solve_packed(vec: jax.Array, g: jax.Array, h: int, block: int) -> jax.Array:
+    return packing.solve_packed_ref(vec, g, h, block)
+
+
+def interp_solve(theta: jax.Array, lams: jax.Array, g: jax.Array, h: int,
+                 block: int, center=0.0) -> jax.Array:
+    """Packed-domain oracle: Horner-eval the packed rows, then packed solve —
+    never materializes a dense factor."""
+    model = picholesky.PiCholesky(
+        theta=theta, center=jnp.asarray(center, theta.dtype), h=h, block=block)
+    vecs = model.eval_packed(lams)
+    return jax.vmap(
+        lambda v: packing.solve_packed_ref(v, g.astype(theta.dtype), h, block)
+    )(vecs)
 
 
 def ssm_scan(xc, dt, b_mat, c_mat, a, d_skip):

@@ -9,10 +9,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import picholesky
+from repro.core import packing, picholesky
 from repro.kernels import ref
 from repro.kernels.chol_blocked import cholesky_blocked
-from repro.kernels.poly_interp import interp_factors
+from repro.kernels.packed_trsm import solve_lower_packed, solve_packed
+from repro.kernels.poly_interp import interp_factors, interp_solve
 from repro.kernels.tri_pack import pack_tril, unpack_tril
 from repro.kernels.trsm import solve_lower_blocked, solve_factor_sweep
 
@@ -77,6 +78,47 @@ def test_solve_factor_sweep_kernel():
     thetas = solve_factor_sweep(ls, g, block=16)
     np.testing.assert_allclose(thetas, ref.solve_factor_sweep(ls, g),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("h,block,q", [(16, 8, 1), (37, 8, 5), (64, 16, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_packed_trsm_kernel(h, block, q, dtype):
+    """Packed-domain trsm ≡ the pure-jnp packed oracle, both sweeps."""
+    a = _spd(h, dtype)
+    l = jnp.linalg.cholesky(a.astype(jnp.float64)).astype(dtype)
+    vec = packing.pack_tril(l, block)
+    g = jax.random.normal(jax.random.PRNGKey(1), (h, q),
+                          jnp.float32).astype(dtype)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-9
+    for transpose in (False, True):
+        w = solve_lower_packed(vec, g, h, block, transpose=transpose)
+        np.testing.assert_allclose(
+            w, ref.solve_lower_packed(vec, g, h, block, transpose=transpose),
+            rtol=tol, atol=tol)
+    th = solve_packed(vec, g[:, 0], h, block)
+    np.testing.assert_allclose(th, ref.solve_packed(vec, g[:, 0], h, block),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("h,block,degree", [(32, 8, 2), (48, 16, 3)])
+def test_interp_solve_kernel(h, block, degree):
+    """Fused Horner + packed substitution ≡ eval_packed → packed solve."""
+    a = _spd(h, jnp.float64)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, degree + 3)
+    model = picholesky.fit(a, sample, degree, block=block)
+    lams = jnp.logspace(-2, 0, 9)
+    g = jax.random.normal(jax.random.PRNGKey(5), (h,), jnp.float64)
+    out = interp_solve(model.theta, lams, g, h, block, center=model.center)
+    expect = ref.interp_solve(model.theta, lams, g, h, block,
+                              center=model.center)
+    np.testing.assert_allclose(out, expect, rtol=1e-8, atol=1e-8)
+    # and against the exact dense solves at the sample nodes themselves,
+    # where the interpolant passes through the data (g > degree fit is
+    # least-squares, so compare interpolant-to-interpolant elsewhere)
+    dense = model.eval_factor(lams)
+    exact = jax.vmap(lambda l: ref.solve_lower(
+        l, ref.solve_lower(l, g), transpose=True))(dense)
+    np.testing.assert_allclose(out, exact, rtol=1e-6, atol=1e-8)
 
 
 @pytest.mark.parametrize("h,block,degree", [(32, 8, 2), (48, 16, 3)])
