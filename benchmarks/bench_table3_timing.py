@@ -15,7 +15,8 @@ the same schema on tiny problems for CI."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import cv, cv_host, engine, packing
+from repro.core import cv, cv_host, engine, factor_cache, packing
+from repro.core.backends import CountingBackend, ReferenceBackend
 
 from .common import SIZES, SMOKE, bench_pair, emit, emit_json, ridge_problem, timeit
 
@@ -116,6 +117,54 @@ def _sweep_scaling(h: int, qs, chunk: int) -> dict:
     return record
 
 
+def _warm_vs_cold(h: int, qs, chunk: int) -> dict:
+    """Factor-cache replay record: the same sweep cold (fold_state runs,
+    cache write-only) vs warm (cache hit, fold_state skipped — zero
+    factorizations, asserted via the CountingBackend trace hook).
+
+    Both engines are warmed up once before timing so the comparison is
+    factorize+fit+sweep vs replay-only, not compile time.  Measured per
+    grid density: the λ-stage is paid by both paths, so the warm advantage
+    is largest on coarse grids (the repeated model-assessment pass the
+    cache exists for) and approaches the λ-stage floor as q grows.
+    """
+    x, y = ridge_problem(h)
+    folds = cv.make_folds(x, y, 5)
+    block = max(16, min(64, h // 8))
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=block)  # noqa: E731
+
+    record = {"h": h, "chunk": chunk, "block": block, "grids": {}}
+    for q in qs:
+        lams = jnp.logspace(-3, 2, q)
+        cache = factor_cache.FactorCache()
+        cold_bk = CountingBackend(ReferenceBackend())
+        cold = engine.CVEngine(strat(), backend=cold_bk, cache=cache,
+                               reuse=False, lam_chunk=chunk, donate=False)
+        warm_bk = CountingBackend(ReferenceBackend())
+        warm = engine.CVEngine(strat(), backend=warm_bk, cache=cache,
+                               lam_chunk=chunk, donate=False)
+
+        r_cold = cold.run(folds, lams)      # compiles + traces the cold path
+        t_cold = timeit(lambda: cold.run(folds, lams), repeats=3, warmup=0)
+        r_warm = warm.run(folds, lams)      # traces the replay path
+        t_warm = timeit(lambda: warm.run(folds, lams), repeats=3, warmup=0)
+        rec = {
+            "cold_s": t_cold, "warm_s": t_warm,
+            "warm_vs_cold_speedup": t_cold / t_warm,
+            "cold_trace_cholesky_calls": cold_bk.n_cholesky,
+            "warm_trace_cholesky_calls": warm_bk.n_cholesky,
+            "cold_n_exact_chol": r_cold.n_exact_chol,
+            "warm_n_exact_chol": r_warm.n_exact_chol,
+            "cache": cache.stats,
+        }
+        record["grids"][str(q)] = rec
+        emit(f"table3_warmcold_h{h}_q{q}", t_warm,
+             f"cold={t_cold:.3f}s warm={t_warm:.3f}s "
+             f"speedup={rec['warm_vs_cold_speedup']:.2f}x "
+             f"warm_chol={warm_bk.n_cholesky}")
+    return record
+
+
 def run():
     if SMOKE:
         sizes, sweep_h, qs, chunk = [32], 32, [10, 25], 4
@@ -126,6 +175,9 @@ def run():
         sizes = sorted(set(SIZES + [1024]))[-2:]
         sweep_h, qs, chunk = 128, [100, 1000], 16
 
+    # warm-vs-cold wants the factorization term visible (the cost the
+    # cache removes): large h, the paper's q=31 grid + a coarse q=10 pass
+    wc_h, wc_qs = (32, [10]) if SMOKE else (512, [10, 31])
     record = {
         "schema": "bench_table3/v1",
         "smoke": SMOKE,
@@ -133,6 +185,7 @@ def run():
         "x64": bool(jax.config.jax_enable_x64),
         "sizes": _algo_table(sizes),
         "sweep_scaling": _sweep_scaling(sweep_h, qs, chunk),
+        "warm_vs_cold": _warm_vs_cold(wc_h, wc_qs, chunk),
     }
     emit_json("BENCH_table3.json", record)
     return record

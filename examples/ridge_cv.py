@@ -80,6 +80,27 @@ def main():
         print(f"{name:8s} {dt:8.2f} {r.best_error:12.4f} "
               f"{r.best_lam:11.4g} {r.n_exact_chol:6d}")
 
+    # ---- warm-replay factor cache: the model-assessment loop.  The first
+    # sweep fits and caches Θ per fold; every later sweep over a grid with
+    # the same λ range (any density) replays it — zero factorizations.
+    from repro.core import factor_cache  # noqa: E402
+
+    cache = factor_cache.FactorCache()
+    print("\nFactorCache warm replay (PiCholesky, g=4):")
+    for tag, grid, reuse in [("cold 31", lams, False),   # write-only
+                             ("warm 31", lams, "exact"),
+                             ("warm 101", jnp.logspace(-3, 2, 101),
+                              "exact")]:
+        eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4), cache=cache,
+                              reuse=reuse)
+        eng.run(folds, grid)                      # compile
+        t0 = time.perf_counter()
+        r = eng.run(folds, grid)
+        dt = time.perf_counter() - t0
+        status = r.extras["engine"]["cache"]["status"]
+        print(f"{tag:8s} {dt:8.2f} {r.best_error:12.4f} "
+              f"{r.best_lam:11.4g} {r.n_exact_chol:6d}  [{status}]")
+
 
 if __name__ == "__main__":
     main()

@@ -18,13 +18,19 @@ SWEEP_Q_KEYS = {"host_s", "engine_s", "engine_vs_host",
                 "temp_bytes_chunked", "temp_bytes_unchunked",
                 "est_dense_bytes"}
 
+WARM_COLD_Q_KEYS = {"cold_s", "warm_s", "warm_vs_cold_speedup",
+                    "cold_trace_cholesky_calls",
+                    "warm_trace_cholesky_calls", "cold_n_exact_chol",
+                    "warm_n_exact_chol", "cache"}
+
 
 def check_table3(path: pathlib.Path) -> list[str]:
     errors = []
     rec = json.loads(path.read_text())
     if rec.get("schema") != "bench_table3/v1":
         errors.append(f"schema: expected bench_table3/v1, got {rec.get('schema')!r}")
-    for key in ("sizes", "sweep_scaling", "jax_backend", "x64", "smoke"):
+    for key in ("sizes", "sweep_scaling", "warm_vs_cold", "jax_backend",
+                "x64", "smoke"):
         if key not in rec:
             errors.append(f"missing top-level key {key!r}")
     for h, times in rec.get("sizes", {}).items():
@@ -42,6 +48,25 @@ def check_table3(path: pathlib.Path) -> list[str]:
         missing = SWEEP_Q_KEYS - qrec.keys()
         if missing:
             errors.append(f"sweep_scaling.q[{q}] missing {sorted(missing)}")
+    wc = rec.get("warm_vs_cold", {})
+    for key in ("h", "chunk", "block", "grids"):
+        if key not in wc:
+            errors.append(f"warm_vs_cold missing {key!r}")
+    if not wc.get("grids"):
+        errors.append("warm_vs_cold.grids is empty")
+    for q, qrec in wc.get("grids", {}).items():
+        missing = WARM_COLD_Q_KEYS - qrec.keys()
+        if missing:
+            errors.append(f"warm_vs_cold.grids[{q}] missing {sorted(missing)}")
+            continue
+        if qrec["warm_trace_cholesky_calls"] != 0:
+            errors.append(
+                f"warm_vs_cold.grids[{q}]: warm sweep traced "
+                f"{qrec['warm_trace_cholesky_calls']} cholesky calls "
+                "(the warm-replay contract is zero)")
+        if qrec["warm_n_exact_chol"] != 0:
+            errors.append(
+                f"warm_vs_cold.grids[{q}]: warm_n_exact_chol must be 0")
     return errors
 
 

@@ -36,7 +36,11 @@ def _flatten(tree: Any):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    """``keep`` bounds how many steps survive garbage collection; ``None``
+    disables GC entirely (content stores like the factor cache keep every
+    entry — each one is independently addressable, not a rolling history)."""
+
+    def __init__(self, directory: str, keep: Optional[int] = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
@@ -65,8 +69,12 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    def step_dir(self, step: int) -> str:
+        """Directory a given step lives in (exists only once saved)."""
+        return os.path.join(self.directory, f"step_{step:012d}")
+
     def _write(self, step: int, host_leaves, treedef) -> str:
-        final = os.path.join(self.directory, f"step_{step:012d}")
+        final = self.step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
@@ -91,6 +99,8 @@ class CheckpointManager:
         return final
 
     def _gc(self):
+        if self.keep is None:
+            return
         steps = self.all_steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:012d}"),

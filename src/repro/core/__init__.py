@@ -6,15 +6,17 @@ Public API:
   solvers      ridge solvers (Chol / SVD / t-SVD / r-SVD)
   backends     the single backend= switch (Pallas kernels vs jnp.linalg)
   engine       CVEngine — jitted/sharded fold × λ sweep + CVStrategy plug-ins
+  factor_cache warm-replay cache of fitted Θ / packed anchors (content-keyed)
   cv           k-fold CV drivers (compat wrappers over the engine) + MChol
   cv_host      pre-engine host-loop drivers (benchmark baseline, test oracle)
   bound        Theorem 4.4/4.7 error-bound terms
   ridge_cv     RidgeCV — the end-to-end, mesh-aware entry point
 """
-from . import (backends, bound, cv, cv_host, engine, folds, packing,  # noqa: F401
-               picholesky, ridge_cv, solvers)
+from . import (backends, bound, cv, cv_host, engine, factor_cache,  # noqa: F401
+               folds, packing, picholesky, ridge_cv, solvers)
 from .backends import resolve_backend  # noqa: F401
 from .engine import CVEngine, CVStrategy, make_strategy  # noqa: F401
+from .factor_cache import FactorCache  # noqa: F401
 from .folds import CVResult, FoldData, make_folds  # noqa: F401
 from .picholesky import PiCholesky, fit as fit_picholesky  # noqa: F401
 from .ridge_cv import RidgeCV  # noqa: F401

@@ -21,7 +21,13 @@ This module runs the whole grid as **one jitted computation**:
   independent of the grid size q,
 * all linear algebra goes through one ``backend=`` switch
   (:mod:`repro.core.backends`): Pallas kernels on TPU, ``jnp.linalg``
-  elsewhere.
+  elsewhere,
+* with a ``cache=`` (:mod:`repro.core.factor_cache`), repeated sweeps over
+  overlapping λ grids take the **warm-replay path**: the fitted per-fold Θ
+  is content-fingerprinted and reused, skipping the heavy ``fold_state``
+  stage entirely — a warm sweep performs *zero* Cholesky factorizations
+  and replays any grid over the cached anchor range through the fused
+  ``interp_solve`` chunked stream.
 
 Algorithms plug in through the small :class:`CVStrategy` protocol; the five
 paper algorithms (`exact`, `picholesky`, `picholesky_warmstart`, `svd`,
@@ -56,6 +62,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed import sharding as shardlib
 
+from . import factor_cache as cachelib
 from . import packing, picholesky, solvers
 from .backends import BackendLike, LinalgBackend, resolve_backend
 from .folds import CVResult, FoldData, holdout_nrmse
@@ -109,6 +116,19 @@ class StrategyBase:
 
     def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
         return ()
+
+    def cache_meta(self, lams) -> Optional[dict]:
+        """Warm-replay cache support (None = not cacheable).
+
+        Cacheable strategies return ``dict(anchors=<(g,) λ grid the fit
+        factorizes at>, params=<static fit parameters>)`` — the λ-dependent
+        and static halves of the :class:`~repro.core.factor_cache.CacheKey`.
+        Contract for a non-None return: ``fold_state`` is a pure function
+        of (per-fold train Hessian, anchors, params, backend), and
+        ``fold_errors`` must not read ``aux`` (a replayed sweep runs with
+        ``aux=()``, skipping ``prepare`` entirely).
+        """
+        return None
 
 
 # ---------------------------------------------------------------- strategies
@@ -168,6 +188,29 @@ class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
         return picholesky.fit(h_tr_f, aux, self.degree, block=self.block,
                               basis=self.basis, chol_fn=self.chol_fn,
                               backend=bk)
+
+    def cache_meta(self, lams):
+        if self.chol_fn is not None:     # opaque override — unkeyable
+            return None
+        anchors = _sample_grid(jnp.asarray(lams), self.g)
+        return dict(anchors=anchors,
+                    params=dict(strategy=self.name, g=self.g,
+                                degree=self.degree, block=self.block,
+                                basis=self.basis))
+
+    def fold_state_and_anchors(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        """``fold_state`` that also surfaces the tile-packed anchor factors
+        (g, P) so the engine can cache them — a later fit with a different
+        degree/basis over the same anchors then refits from these targets
+        with zero factorizations (``picholesky.fit(factors=...)``)."""
+        h = h_tr_f.shape[-1]
+        eye = jnp.eye(h, dtype=h_tr_f.dtype)
+        factors = jax.vmap(lambda lam: bk.cholesky(h_tr_f + lam * eye))(aux)
+        vec = bk.pack_tril(factors, self.block)
+        pf = packing.PackedFactor(vec=vec, h=h, block=self.block)
+        model = picholesky.fit(h_tr_f, aux, self.degree, block=self.block,
+                               basis=self.basis, factors=pf, backend=bk)
+        return model, vec
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -230,6 +273,20 @@ class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
         return picholesky.PiCholesky(theta=aux["base_theta"] + dtheta,
                                      center=aux["center"],
                                      h=h, block=self.block)
+
+    def cache_meta(self, lams):
+        if self.chol_fn is not None:
+            return None
+        # Θ_f depends on both node sets: the fold-0 anchor fit and the
+        # per-fold residual refresh grid.
+        lams = jnp.asarray(lams)
+        anchors = jnp.concatenate([
+            _sample_grid(lams, self.g_first),
+            _sample_grid(lams, max(self.g_rest, 1))])
+        return dict(anchors=anchors,
+                    params=dict(strategy=self.name, g_first=self.g_first,
+                                g_rest=self.g_rest, degree=self.degree,
+                                mu=self.mu, block=self.block))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -358,6 +415,24 @@ class CVEngine:
                it; ``None`` disables streaming (whole shard in one call).
                Requires ``fold_errors`` to be λ-elementwise — true of every
                built-in strategy (each λ's solve/score is independent).
+    cache:     a :class:`~repro.core.factor_cache.FactorCache` enabling the
+               warm-replay path (strategies advertising ``cache_meta``,
+               i.e. the piCholesky family).  On a fingerprint hit the heavy
+               ``fold_state`` stage is skipped entirely and the sweep
+               replays the cached Θ through the fused ``interp_solve``
+               chunked stream (still O(chunk · P)); on a miss the cold
+               stage runs and populates the cache.  ``None`` (default)
+               keeps the original single-jit fused sweep.
+    reuse:     cache read policy: ``'exact'`` (default — the requested
+               grid must derive the very anchor set the entry was fitted
+               on), ``'covering'`` (also accept a cached Θ whose anchor
+               range covers the requested grid), or ``False`` (write-only:
+               never read, always repopulate — the cold baseline for
+               warm-vs-cold measurements).
+    cache_anchors: also cache the per-(fold, λ_s) tile-packed anchor
+               factors; a later run over the same anchors with a different
+               degree/basis then refits Θ from them with zero
+               factorizations.
     """
 
     strategy: Union[CVStrategy, str]
@@ -366,14 +441,24 @@ class CVEngine:
     donate: Optional[bool] = None
     block: Optional[int] = None
     lam_chunk: Union[None, int, str] = "auto"
+    cache: Optional[cachelib.FactorCache] = None
+    reuse: Union[bool, str] = "exact"
+    cache_anchors: bool = False
 
     def __post_init__(self):
         if isinstance(self.strategy, str):
             self.strategy = make_strategy(self.strategy)
+        if self.reuse is True:
+            self.reuse = "exact"
+        if self.reuse not in (False, "exact", "covering"):
+            raise ValueError(f"reuse must be 'exact', 'covering' or False; "
+                             f"got {self.reuse!r}")
         self._bk = resolve_backend(self.backend, block=self.block)
         if self.donate is None:
             self.donate = jax.default_backend() != "cpu"
-        self._sweeps: dict = {}   # mesh-key -> jitted sweep fn
+        self._sweeps: dict = {}   # mesh-key -> jitted fused sweep fn
+        self._states: dict = {}   # (mesh-key, with_anchors) -> jitted state fn
+        self._replays: dict = {}  # mesh-key -> jitted replay fn
         self._split = jax.jit(
             lambda hess, grad, fh, fg: (hess[None] - fh, grad[None] - fg))
 
@@ -407,15 +492,25 @@ class CVEngine:
 
     # -- sweep construction ----------------------------------------------
 
-    def _core(self, h_tr, g_tr, x_folds, y_folds, f_idx, lams, aux):
-        """(k_loc folds) × (q_loc λs) error grid — runs per device shard.
-
-        The λ axis is streamed in fixed-size chunks (``lam_chunk``) under a
-        sequential ``lax.map``: only one chunk's interpolants/factors are
-        live at a time, so peak memory is O(chunk · P) however dense the
-        grid.  Composes with the folds × lams ``shard_map``: chunking
-        happens per device on the local λ shard.
+    def _stream_errors(self, errors_at, lams, k_loc, h, dtype):
+        """Stream ``errors_at`` over the local λ shard in ``lam_chunk``-sized
+        chunks under a sequential ``lax.map`` — only one chunk's
+        interpolants/factors are live at a time, so peak memory is
+        O(chunk · P) however dense the grid.  Composes with the
+        folds × lams ``shard_map``: chunking happens per device on the
+        local λ shard.  Shared by the fused cold sweep and the
+        warm-replay path, so the memory contract has one implementation.
         """
+        q_loc = lams.shape[0]
+        chunk = self._resolve_chunk(q_loc, h, dtype)
+        if chunk is None or chunk >= q_loc:
+            return errors_at(lams)
+        chunks, _ = shardlib.chunk_lams(lams, chunk)    # (n_c, chunk)
+        errs = jax.lax.map(errors_at, chunks)           # (n_c, k_loc, chunk)
+        return jnp.moveaxis(errs, 1, 0).reshape(k_loc, -1)[:, :q_loc]
+
+    def _core(self, h_tr, g_tr, x_folds, y_folds, f_idx, lams, aux):
+        """(k_loc folds) × (q_loc λs) error grid — runs per device shard."""
         strat, bk = self.strategy, self._bk
         state = jax.vmap(
             lambda f, h, g: strat.fold_state(f, h, g, aux, bk)
@@ -427,14 +522,8 @@ class CVEngine:
                     st, f, h, g, x, y, lams_c, aux, bk)
             )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
 
-        q_loc = lams.shape[0]
-        chunk = self._resolve_chunk(q_loc, h_tr.shape[-1], h_tr.dtype)
-        if chunk is None or chunk >= q_loc:
-            return errors_at(lams)
-        chunks, _ = shardlib.chunk_lams(lams, chunk)    # (n_c, chunk)
-        errs = jax.lax.map(errors_at, chunks)           # (n_c, k_loc, chunk)
-        k_loc = h_tr.shape[0]
-        return jnp.moveaxis(errs, 1, 0).reshape(k_loc, -1)[:, :q_loc]
+        return self._stream_errors(errors_at, lams, h_tr.shape[0],
+                                   h_tr.shape[-1], h_tr.dtype)
 
     def _build_sweep(self, mesh: Optional[Mesh]):
         strat, bk = self.strategy, self._bk
@@ -460,12 +549,118 @@ class CVEngine:
         donate = (0, 1) if self.donate else ()
         return jax.jit(sweep, donate_argnums=donate)
 
+    @staticmethod
+    def _mesh_key(mesh: Optional[Mesh]):
+        return None if mesh is None else (tuple(mesh.shape.items()),
+                                          tuple(map(id, mesh.devices.flat)))
+
     def _sweep_fn(self, mesh: Optional[Mesh]):
-        key = None if mesh is None else (tuple(mesh.shape.items()),
-                                         tuple(map(id, mesh.devices.flat)))
+        key = self._mesh_key(mesh)
         if key not in self._sweeps:
             self._sweeps[key] = self._build_sweep(mesh)
         return self._sweeps[key]
+
+    # -- warm-replay path (factor cache) ----------------------------------
+    #
+    # With a cache, the sweep splits at the PR-1 seam into two jitted
+    # stages: the λ-independent ``fold_state`` stage (skipped entirely on a
+    # hit) and the replay stage, which streams any λ grid through the
+    # fused interp_solve chunked pipeline from a given state.  Neither
+    # donates the train Hessians — the state fn's output must outlive the
+    # call (it goes into the cache) and the replay reads h_tr/g_tr again.
+
+    def _replay_core(self, state, f_idx, h_tr, g_tr, x_folds, y_folds, lams):
+        """Per-shard replay: fold_errors from a cached per-fold state.
+
+        Runs with ``aux=()`` — ``prepare`` is never called, so a strategy
+        is only cacheable if its ``fold_errors`` ignores ``aux`` (the
+        ``cache_meta`` contract).
+        """
+        strat, bk = self.strategy, self._bk
+
+        def errors_at(lams_c):
+            return jax.vmap(
+                lambda st, f, h, g, x, y: strat.fold_errors(
+                    st, f, h, g, x, y, lams_c, (), bk)
+            )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
+
+        return self._stream_errors(errors_at, lams, h_tr.shape[0],
+                                   h_tr.shape[-1], h_tr.dtype)
+
+    def _build_replay(self, mesh: Optional[Mesh]):
+        def replay(state, h_tr, g_tr, x_folds, y_folds, lams):
+            k = h_tr.shape[0]
+            f_idx = jnp.arange(k)
+            if mesh is None:
+                return self._replay_core(state, f_idx, h_tr, g_tr,
+                                         x_folds, y_folds, lams)
+            fold_ax, lam_ax = shardlib.CV_FOLD_AXIS, shardlib.CV_LAM_AXIS
+            sharded = shard_map(
+                self._replay_core, mesh=mesh,
+                in_specs=(shardlib.cv_state_specs(state), P(fold_ax),
+                          P(fold_ax), P(fold_ax), P(fold_ax), P(fold_ax),
+                          P(lam_ax)),
+                out_specs=P(fold_ax, lam_ax),
+                check_rep=False,
+            )
+            return sharded(state, f_idx, h_tr, g_tr, x_folds, y_folds, lams)
+
+        return jax.jit(replay)
+
+    def _replay_fn(self, mesh: Optional[Mesh]):
+        key = self._mesh_key(mesh)
+        if key not in self._replays:
+            self._replays[key] = self._build_replay(mesh)
+        return self._replays[key]
+
+    def _build_state(self, mesh: Optional[Mesh], with_anchors: bool):
+        strat, bk = self.strategy, self._bk
+
+        def core(f_idx, h_tr, g_tr, aux):
+            def one(f, h_f, g_f):
+                if with_anchors:
+                    return strat.fold_state_and_anchors(f, h_f, g_f, aux, bk)
+                return strat.fold_state(f, h_f, g_f, aux, bk), \
+                    jnp.zeros((0,), h_f.dtype)
+            return jax.vmap(one)(f_idx, h_tr, g_tr)
+
+        def statef(h_tr, g_tr, x_folds, y_folds, lams):
+            k = h_tr.shape[0]
+            f_idx = jnp.arange(k)
+            aux = strat.prepare(x_folds, y_folds, h_tr, g_tr, lams, bk)
+            if mesh is None:
+                return core(f_idx, h_tr, g_tr, aux)
+            fold_ax = shardlib.CV_FOLD_AXIS
+            repl = jax.tree.map(lambda _: P(), aux)
+            sharded = shard_map(
+                core, mesh=mesh,
+                in_specs=(P(fold_ax), P(fold_ax), P(fold_ax), repl),
+                out_specs=(P(fold_ax), P(fold_ax)),
+                check_rep=False,
+            )
+            return sharded(f_idx, h_tr, g_tr, aux)
+
+        return jax.jit(statef)
+
+    def _state_fn(self, mesh: Optional[Mesh], with_anchors: bool):
+        key = (self._mesh_key(mesh), with_anchors)
+        if key not in self._states:
+            self._states[key] = self._build_state(mesh, with_anchors)
+        return self._states[key]
+
+    def _refit_from_anchors(self, pf: packing.PackedFactor, meta: dict):
+        """Θ from cached packed anchor factors — a batched GEMM least-
+        squares per fold, zero factorizations (the anchor-hit path)."""
+        strat, bk = self.strategy, self._bk
+        anchors = jnp.asarray(meta["anchors"])
+
+        def one(vec_f):
+            pf_f = packing.PackedFactor(vec=vec_f, h=pf.h, block=pf.block)
+            return picholesky.fit(None, anchors, strat.degree,
+                                  block=strat.block, basis=strat.basis,
+                                  factors=pf_f, backend=bk)
+
+        return jax.jit(jax.vmap(one))(jnp.asarray(pf.vec))
 
     # -- public API -------------------------------------------------------
 
@@ -484,6 +679,49 @@ class CVEngine:
         lowered = self._sweep_fn(None).lower(h_tr, g_tr, folds.x_folds,
                                              folds.y_folds, lams)
         return int(lowered.compile().memory_analysis().temp_size_in_bytes)
+
+    def _run_cached(self, meta: dict, mesh, h_tr, g_tr, folds: FoldData,
+                    lams_run: jax.Array, q: int):
+        """Warm-replay dispatch: fingerprint → (hit | anchor refit | cold
+        populate) → replay.  Returns (error grid, cache_info, n_chol)."""
+        strat, cache = self.strategy, self.cache
+        key = cachelib.make_key(
+            h_tr, meta["anchors"], block=meta["params"]["block"],
+            backend=self._bk.name, params=meta["params"])
+        k = h_tr.shape[0]
+
+        if self.reuse:
+            entry = cache.lookup(key, self.reuse)
+        else:
+            entry = None
+            cache.misses += 1     # write-only runs are misses by definition
+        status, n_chol = "hit", 0
+        if entry is None:
+            with_anchors = (self.cache_anchors
+                            and hasattr(strat, "fold_state_and_anchors"))
+            cached_pf = (cache.get_anchors(key)
+                         if self.reuse and with_anchors else None)
+            if cached_pf is not None:
+                # same anchor factors, different polynomial: refit Θ from
+                # the cached packed targets — still zero factorizations
+                state = self._refit_from_anchors(cached_pf, meta)
+                entry = cache.put(key, state, cached_pf)
+                status = "refit"
+            else:
+                state, avec = self._state_fn(mesh, with_anchors)(
+                    h_tr, g_tr, folds.x_folds, folds.y_folds, lams_run)
+                pf = (packing.PackedFactor(vec=avec, h=h_tr.shape[-1],
+                                           block=meta["params"]["block"])
+                      if with_anchors else None)
+                entry = cache.put(key, state, pf)
+                status, n_chol = "miss", strat.n_exact_chol(k, q)
+        errs = self._replay_fn(mesh)(entry.state, h_tr, g_tr, folds.x_folds,
+                                     folds.y_folds, lams_run)
+        # digest of the entry actually SERVED (≠ the requested key's under
+        # a covering hit), so results are attributable to their Θ
+        info = dict(status=status, digest=entry.key.digest()[:12],
+                    policy=self.reuse, **cache.stats)
+        return errs, info, n_chol
 
     def run(self, folds: FoldData, lams: jax.Array) -> CVResult:
         lams = jnp.asarray(lams)
@@ -504,12 +742,23 @@ class CVEngine:
         # engine-owned train-stat buffers: safe to donate into the sweep
         h_tr, g_tr = self._split(folds.hess, folds.grad,
                                  folds.fold_hess, folds.fold_grad)
-        errs = self._sweep_fn(mesh)(h_tr, g_tr, folds.x_folds,
-                                    folds.y_folds, lams_run)
+        meta = (self.strategy.cache_meta(lams)
+                if self.cache is not None
+                and hasattr(self.strategy, "cache_meta") else None)
+        if meta is not None:
+            errs, cache_info, n_chol = self._run_cached(
+                meta, mesh, h_tr, g_tr, folds, lams_run, q)
+        else:
+            errs = self._sweep_fn(mesh)(h_tr, g_tr, folds.x_folds,
+                                        folds.y_folds, lams_run)
+            cache_info = (None if self.cache is None
+                          else dict(status="bypass"))
+            n_chol = self.strategy.n_exact_chol(k, q)
         errs = np.asarray(errs)[:, :q]
         return CVResult.from_errors(
-            lams, errs.mean(0), self.strategy.n_exact_chol(k, q),
+            lams, errs.mean(0), n_chol,
             engine=dict(
                 strategy=self.strategy.name, backend=self._bk.name,
                 mesh=None if mesh is None else dict(mesh.shape),
-                donated=bool(self.donate), lam_chunk=self.lam_chunk))
+                donated=bool(self.donate), lam_chunk=self.lam_chunk,
+                cache=cache_info))

@@ -1,0 +1,342 @@
+"""Warm-replay factor cache: reuse fitted Θ / packed anchors across sweeps.
+
+The paper's premise is that factorization over the λ grid dominates CV cost;
+once the anchor Cholesky factors are fitted, the interpolant Θ — (r+1, P),
+q-independent — answers *any* later grid over the same anchor range at zero
+factorization cost.  This module is that seam made concrete: a content-
+addressed cache of per-fold fitted :class:`~repro.core.picholesky.PiCholesky`
+states (and optionally the per-(fold, λ_s) packed anchor factors), consumed
+by :class:`~repro.core.engine.CVEngine` via its ``cache=`` / ``reuse=``
+wiring.  On a hit the engine skips ``fold_state`` entirely and replays the
+sweep through the fused ``interp_solve`` chunked stream.
+
+Keying — a :class:`CacheKey` is a content fingerprint, never an object id:
+
+* ``fold_hashes``   sha256 of each fold's training Hessian (shape + dtype
+                    + bytes), so a perturbed problem can never hit,
+* ``anchors``       the anchor-λ grid the fit factorized at,
+* ``h, block``      packed-layout geometry,
+* ``dtype``         of the training Hessians,
+* ``backend``       name of the :class:`~repro.core.backends.LinalgBackend`
+                    that produced the factors,
+* ``params``        the strategy's static fit parameters (degree, basis, …).
+
+Three derived digests serve three lookups:
+
+* :meth:`CacheKey.digest`        — exact hit (everything matches),
+* :meth:`CacheKey.base_digest`   — everything but the anchor grid; the
+  ``'covering'`` reuse policy accepts a cached Θ whose anchor range covers
+  the requested grid,
+* :meth:`CacheKey.anchor_digest` — only what the anchor *factors* depend on
+  (Hessians, anchor λs, geometry, dtype, backend); a Θ miss with an anchor
+  hit refits the polynomial from the cached
+  :class:`~repro.core.packing.PackedFactor` targets without factorizing.
+
+Persistence goes through :class:`~repro.checkpoint.CheckpointManager`
+(Θ and PackedFactor are already pytrees): each entry is one checkpoint step
+plus an ``index.json`` sidecar recording the key and leaf specs, so caches
+survive across processes and torn writes are skipped on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+from . import packing, picholesky
+
+__all__ = ["CacheKey", "CacheEntry", "FactorCache", "array_hash",
+           "hessian_fingerprint", "make_key", "INDEX_FILENAME"]
+
+
+INDEX_FILENAME = "index.json"
+
+#: Relative slack when testing whether a cached anchor range covers a
+#: requested λ range under the ``'covering'`` reuse policy — exactly the
+#: float noise of recomputing grid endpoints, not a semantic tolerance.
+COVER_RTOL = 1e-12
+
+
+def array_hash(arr) -> str:
+    """sha256 of an array's shape + dtype + raw bytes (host transfer)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def hessian_fingerprint(h_tr) -> Tuple[str, ...]:
+    """Per-fold content hash of the (k, h, h) training-Hessian stack."""
+    a = np.asarray(h_tr)
+    if a.ndim != 3:
+        raise ValueError(f"expected (k, h, h) fold Hessians, got {a.shape}")
+    return tuple(array_hash(f) for f in a)
+
+
+def _digest(payload: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """Content fingerprint of one fitted fold×anchor state (see module doc)."""
+
+    fold_hashes: Tuple[str, ...]
+    anchors: Tuple[float, ...]
+    h: int
+    block: int
+    dtype: str
+    backend: str
+    params: Tuple[Tuple[str, Any], ...]
+
+    def _payload(self) -> dict:
+        return dict(fold_hashes=list(self.fold_hashes),
+                    anchors=list(self.anchors), h=self.h, block=self.block,
+                    dtype=self.dtype, backend=self.backend,
+                    params=[list(p) for p in self.params])
+
+    def digest(self) -> str:
+        return _digest(self._payload())
+
+    def base_digest(self) -> str:
+        p = self._payload()
+        del p["anchors"]
+        return _digest(p)
+
+    def anchor_digest(self) -> str:
+        """What the anchor *factors* L_s = chol(H_f + λ_s I) depend on —
+        independent of the polynomial degree/basis, so cached anchors can
+        re-fit a different interpolant without any factorization."""
+        p = self._payload()
+        del p["params"]
+        return _digest(p)
+
+    def to_json(self) -> dict:
+        return self._payload()
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "CacheKey":
+        return cls(fold_hashes=tuple(rec["fold_hashes"]),
+                   anchors=tuple(float(a) for a in rec["anchors"]),
+                   h=int(rec["h"]), block=int(rec["block"]),
+                   dtype=str(rec["dtype"]), backend=str(rec["backend"]),
+                   params=tuple((str(k), v) for k, v in rec["params"]))
+
+
+def make_key(h_tr, anchors, *, block: int, backend: str,
+             params: Dict[str, Any]) -> CacheKey:
+    """Fingerprint a sweep's λ-independent inputs.
+
+    ``h_tr``: (k, h, h) per-fold training Hessians (hashed on host — one
+    device sync per ``run``, the price of content addressing).
+    ``anchors``: the anchor-λ grid the fit would factorize at.
+    ``params``: the strategy's static fit parameters (degree, basis, g, …).
+    """
+    h_tr = np.asarray(h_tr)
+    return CacheKey(
+        fold_hashes=hessian_fingerprint(h_tr),
+        anchors=tuple(float(a) for a in np.asarray(anchors).ravel()),
+        h=int(h_tr.shape[-1]), block=int(block),
+        dtype=str(h_tr.dtype), backend=str(backend),
+        params=tuple(sorted(params.items())))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached fit: the batched-over-folds Θ state, and optionally the
+    per-(fold, λ_s) tile-packed anchor factors that produced it."""
+
+    key: CacheKey
+    state: picholesky.PiCholesky          # theta (k, r+1, P), center (k,)
+    anchors: Optional[packing.PackedFactor] = None   # vec (k, g, P)
+    hits: int = 0
+
+
+class FactorCache:
+    """In-memory, content-addressed store of fitted interpolant states.
+
+    ``lookup`` policies:
+
+    * ``'exact'``    — the full :meth:`CacheKey.digest` must match (the
+      requested grid derives the same anchor set the entry was fitted on).
+    * ``'covering'`` — accept any entry matching on :meth:`base_digest`
+      whose anchor range covers the requested range (the cached Θ answers
+      the sub-range, at the wider fit's interpolation accuracy).
+
+    Counters (``hits`` / ``misses`` / ``anchor_hits``) are cumulative over
+    the cache's lifetime; tests and the warm-vs-cold bench read them.
+    """
+
+    def __init__(self):
+        self.entries: Dict[str, CacheEntry] = {}
+        self._by_base: Dict[str, List[str]] = {}
+        self._by_anchor: Dict[str, str] = {}
+        self.hits = 0
+        self.misses = 0
+        self.anchor_hits = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def stats(self) -> dict:
+        return dict(entries=len(self.entries), hits=self.hits,
+                    misses=self.misses, anchor_hits=self.anchor_hits)
+
+    # ---------------------------------------------------------------- read
+
+    def lookup(self, key: CacheKey, policy: str = "exact"
+               ) -> Optional[CacheEntry]:
+        if policy not in ("exact", "covering"):
+            raise ValueError(f"unknown reuse policy {policy!r}; "
+                             "expected 'exact' or 'covering'")
+        entry = self.entries.get(key.digest())
+        if entry is None and policy == "covering":
+            lo, hi = min(key.anchors), max(key.anchors)
+            best_width = None
+            for digest in self._by_base.get(key.base_digest(), ()):
+                cand = self.entries[digest]
+                c_lo, c_hi = min(cand.key.anchors), max(cand.key.anchors)
+                if (c_lo <= lo + abs(lo) * COVER_RTOL
+                        and hi <= c_hi + abs(c_hi) * COVER_RTOL):
+                    # tightest covering range wins: a Θ fitted over fewer
+                    # decades answers the sub-range more accurately
+                    width = c_hi - c_lo
+                    if best_width is None or width < best_width:
+                        best_width, entry = width, cand
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        entry.hits += 1
+        return entry
+
+    def get_anchors(self, key: CacheKey) -> Optional[packing.PackedFactor]:
+        """Cached packed anchor factors for ``key``'s anchor fingerprint
+        (degree/basis-independent), or None.  Counts as an anchor hit."""
+        digest = self._by_anchor.get(key.anchor_digest())
+        if digest is None:
+            return None
+        anchors = self.entries[digest].anchors
+        if anchors is not None:      # entry may have been repopulated bare
+            self.anchor_hits += 1
+        return anchors
+
+    # --------------------------------------------------------------- write
+
+    def put(self, key: CacheKey, state: picholesky.PiCholesky,
+            anchors: Optional[packing.PackedFactor] = None) -> CacheEntry:
+        digest = key.digest()
+        entry = CacheEntry(key=key, state=state, anchors=anchors)
+        if digest not in self.entries:
+            self._by_base.setdefault(key.base_digest(), []).append(digest)
+        self.entries[digest] = entry
+        if anchors is not None:
+            self._by_anchor[key.anchor_digest()] = digest
+        return entry
+
+    # --------------------------------------------------- persistence (disk)
+
+    @staticmethod
+    def _leaf_spec(arr) -> dict:
+        a = np.asarray(arr)
+        return dict(shape=list(a.shape), dtype=str(a.dtype))
+
+    @staticmethod
+    def _leaf_like(spec: dict) -> np.ndarray:
+        return np.zeros(tuple(spec["shape"]), dtype=np.dtype(spec["dtype"]))
+
+    def save(self, directory: str) -> str:
+        """Persist every entry through :class:`CheckpointManager` (one step
+        per entry, ``keep=None`` so nothing is garbage-collected) plus an
+        ``index.json`` sidecar.  Crash-safe end to end: new saves always
+        take FRESH step numbers (never rewriting a step an existing index
+        may reference), the index flips last via ``os.replace``, and only
+        then are steps the new index doesn't reference pruned — a torn
+        save leaves the previous index valid and self-consistent."""
+        mgr = CheckpointManager(directory, keep=None)
+        base = max(mgr.all_steps(), default=-1) + 1
+        index = {"schema": "factor_cache/v1", "entries": []}
+        for offset, (digest, e) in enumerate(sorted(self.entries.items())):
+            step = base + offset
+            tree = {"theta": e.state.theta, "center": e.state.center}
+            if e.anchors is not None:
+                tree["anchors_vec"] = e.anchors.vec
+            mgr.save(step, tree)
+            rec = {
+                "step": step, "digest": digest, "key": e.key.to_json(),
+                "state": {"h": e.state.h, "block": e.state.block,
+                          "theta": self._leaf_spec(e.state.theta),
+                          "center": self._leaf_spec(e.state.center)},
+                "anchors": None if e.anchors is None else {
+                    "h": e.anchors.h, "block": e.anchors.block,
+                    "vec": self._leaf_spec(e.anchors.vec)},
+            }
+            index["entries"].append(rec)
+        path = os.path.join(directory, INDEX_FILENAME)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(index, f, indent=2, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        # only after the flip is it safe to drop steps the live index no
+        # longer references (a crash mid-prune just leaves harmless extras)
+        referenced = {rec["step"] for rec in index["entries"]}
+        for s in mgr.all_steps():
+            if s not in referenced:
+                shutil.rmtree(mgr.step_dir(s), ignore_errors=True)
+        return path
+
+    @classmethod
+    def load(cls, directory: str) -> "FactorCache":
+        """Rebuild a cache from :meth:`save` output.  Entries whose
+        checkpoint fails the manager's hash verification (torn writes) are
+        skipped, never half-loaded; a stale digest (index/payload mismatch)
+        is likewise dropped."""
+        cache = cls()
+        path = os.path.join(directory, INDEX_FILENAME)
+        if not os.path.exists(path):
+            return cache
+        with open(path) as f:
+            index = json.load(f)
+        mgr = CheckpointManager(directory, keep=None)
+        for rec in index.get("entries", ()):
+            key = CacheKey.from_json(rec["key"])
+            if key.digest() != rec["digest"]:
+                continue
+            srec = rec["state"]
+            like = {"theta": cls._leaf_like(srec["theta"]),
+                    "center": cls._leaf_like(srec["center"])}
+            arec = rec.get("anchors")
+            if arec is not None:
+                like["anchors_vec"] = cls._leaf_like(arec["vec"])
+            try:
+                tree = mgr.restore(rec["step"], like)
+            except IOError:
+                continue
+            if any(np.asarray(tree[name]).shape != np.asarray(ref).shape
+                   or np.asarray(tree[name]).dtype != np.asarray(ref).dtype
+                   for name, ref in like.items()):
+                continue     # index/payload mismatch — drop, never mis-serve
+            state = picholesky.PiCholesky(
+                theta=tree["theta"], center=tree["center"],
+                h=int(srec["h"]), block=int(srec["block"]))
+            anchors = None
+            if arec is not None:
+                anchors = packing.PackedFactor(
+                    vec=tree["anchors_vec"], h=int(arec["h"]),
+                    block=int(arec["block"]))
+            cache.put(key, state, anchors)
+        return cache

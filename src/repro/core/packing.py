@@ -216,6 +216,17 @@ class PackedFactor:
     h: int = dataclasses.field(metadata=dict(static=True))
     block: int = dataclasses.field(metadata=dict(static=True))
 
+    def __post_init__(self):
+        # A vec whose length disagrees with (h, block) would fail deep in a
+        # tile reshape; fail at construction instead.  Guarded on having a
+        # real shape: tree ops rebuild this dataclass with non-array leaves
+        # (PartitionSpecs, tracers during transpose rules), which must pass.
+        shape = getattr(self.vec, "shape", None)
+        if shape and shape[-1] != packed_size(self.h, self.block):
+            raise ValueError(
+                f"packed vec last dim {shape[-1]} != packed_size(h={self.h},"
+                f" block={self.block}) = {packed_size(self.h, self.block)}")
+
     @property
     def nt(self) -> int:
         return num_tiles(self.h, self.block)

@@ -107,7 +107,7 @@ class PiCholesky:
 
 
 def fit(
-    hessian: jax.Array,
+    hessian: Optional[jax.Array],
     sample_lams: jax.Array,
     degree: int = 2,
     *,
@@ -123,9 +123,20 @@ def fit(
     factorization; ``factors`` skips factorization if the caller already
     has L^s — either dense (g, h, h) or a
     :class:`~repro.core.packing.PackedFactor` with batched vec (g, P),
-    which is consumed without any unpack.
+    which is consumed without any unpack.  With ``factors`` given the
+    Hessian itself is not needed (the factor-cache refit path hands in
+    cached anchors only): pass ``hessian=None`` and the geometry is taken
+    from the factors.
     """
-    h = hessian.shape[-1]
+    if hessian is None and factors is None:
+        raise ValueError("fit needs a hessian to factorize or "
+                         "precomputed factors; got neither")
+    if hessian is not None:
+        h = hessian.shape[-1]
+    elif isinstance(factors, packing.PackedFactor):
+        h = factors.h
+    else:
+        h = factors.shape[-1]
     g = sample_lams.shape[0]
     if g <= degree:
         raise ValueError(f"need g > r: got g={g}, r={degree}")

@@ -19,7 +19,7 @@ from repro.models.params import Spec
 
 __all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
            "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
-           "pad_to_multiple", "chunk_lams"]
+           "pad_to_multiple", "chunk_lams", "cv_state_specs"]
 
 
 def spec_pspec(spec: Spec, ctx) -> P:
@@ -88,6 +88,18 @@ def make_cv_mesh(k: int, devices: Optional[Sequence[jax.Device]] = None) -> Mesh
     n_fold, n_lam = cv_axis_sizes(k, len(devices))
     dev = np.asarray(devices[: n_fold * n_lam]).reshape(n_fold, n_lam)
     return Mesh(dev, (CV_FOLD_AXIS, CV_LAM_AXIS))
+
+
+def cv_state_specs(state: Any) -> Any:
+    """Fold-sharded PartitionSpec tree for a per-fold state pytree.
+
+    Cached/replayed fold states (e.g. the batched
+    :class:`~repro.core.picholesky.PiCholesky` a warm sweep reuses) carry
+    the fold axis as every leaf's leading dimension, so they shard over
+    :data:`CV_FOLD_AXIS` exactly like the training Hessians they were
+    fitted from — cache shards follow the folds × lams mesh.
+    """
+    return jax.tree.map(lambda _: P(CV_FOLD_AXIS), state)
 
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0):

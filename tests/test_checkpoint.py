@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
+from repro.core import packing, picholesky
 
 
 def _tree(seed=0):
@@ -70,3 +71,61 @@ def test_atomic_no_tmp_left(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(7, _tree())
     assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+def test_keep_none_disables_gc(tmp_path):
+    """keep=None retains every step — the factor cache's content-store
+    mode, where entries are addresses, not a rolling history."""
+    mgr = CheckpointManager(str(tmp_path), keep=None)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == [1, 2, 3, 4, 5]
+
+
+def _interp_state(h=24, block=8, k=3, g=4):
+    """A batched-over-folds PiCholesky + PackedFactor pair, as the factor
+    cache stores them (theta (k, r+1, P), anchors vec (k, g, P))."""
+    key = jax.random.PRNGKey(0)
+    hess = jax.vmap(lambda kk: (lambda x: x.T @ x + h * jnp.eye(h))(
+        jax.random.normal(kk, (2 * h, h), jnp.float64))
+    )(jax.random.split(key, k))
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, g)
+    model = jax.vmap(lambda hf: picholesky.fit(hf, sample, 2, block=block)
+                     )(hess)
+    ls = jax.vmap(lambda hf: jax.vmap(
+        lambda lam: jnp.linalg.cholesky(hf + lam * jnp.eye(h)))(sample)
+    )(hess)
+    pf = packing.PackedFactor(vec=packing.pack_tril(ls, block), h=h,
+                              block=block)
+    return model, pf
+
+
+def test_picholesky_and_packed_factor_roundtrip(tmp_path):
+    """Satellite: Θ and PackedFactor are pytrees — a save → load through
+    the manager is bit-for-bit, statics (h, block) preserved, and the
+    restored interpolant solves identically on the reference backend."""
+    model, pf = _interp_state()
+    mgr = CheckpointManager(str(tmp_path), keep=None)
+    mgr.save(0, {"model": model, "anchors": pf})
+    step, back = mgr.restore_latest({"model": model, "anchors": pf})
+    assert step == 0
+    m2, pf2 = back["model"], back["anchors"]
+    np.testing.assert_array_equal(np.asarray(m2.theta),
+                                  np.asarray(model.theta))
+    np.testing.assert_array_equal(np.asarray(m2.center),
+                                  np.asarray(model.center))
+    np.testing.assert_array_equal(np.asarray(pf2.vec), np.asarray(pf.vec))
+    assert (m2.h, m2.block) == (model.h, model.block)
+    assert (pf2.h, pf2.block) == (pf.h, pf.block)
+
+    g_vec = jax.random.normal(jax.random.PRNGKey(7), (model.h,),
+                              jnp.float64)
+    lams = jnp.logspace(-2, 0, 6)
+    for f in range(3):
+        a = picholesky.PiCholesky(theta=model.theta[f],
+                                  center=model.center[f],
+                                  h=model.h, block=model.block)
+        b = picholesky.PiCholesky(theta=m2.theta[f], center=m2.center[f],
+                                  h=m2.h, block=m2.block)
+        np.testing.assert_array_equal(
+            np.asarray(a.solve(lams, g_vec)), np.asarray(b.solve(lams, g_vec)))

@@ -1,0 +1,412 @@
+"""Warm-replay factor cache: content-keyed reuse of fitted Θ across sweeps.
+
+The acceptance contract lives here: a second sweep over an overlapping λ
+grid with a warm cache performs **zero Cholesky factorizations** — asserted
+through the :class:`~repro.core.backends.CountingBackend` hook — and matches
+the cold sweep.  The negative half is just as load-bearing: a perturbed
+train Hessian, changed anchor grid, dtype, block, or backend MUST miss (no
+silent stale hit), and the miss must repopulate correctly.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, factor_cache, packing, picholesky
+from repro.core.backends import (CountingBackend, PallasBackend,
+                                 ReferenceBackend)
+from repro.core.folds import make_folds
+from repro.data import make_regression_dataset
+
+
+def _backend(name):
+    return (ReferenceBackend() if name == "reference"
+            else PallasBackend(chol_block=8, trsm_block=8))
+
+
+def _folds(h=32, n=256, k=4, seed=1, dtype=jnp.float64, jitter=0.0):
+    x, y = make_regression_dataset(jax.random.PRNGKey(seed), n, h,
+                                   dtype=jnp.float64)
+    if jitter:
+        x = x + jitter * jax.random.normal(jax.random.PRNGKey(99), x.shape,
+                                           jnp.float64)
+    return make_folds(x.astype(dtype), y.astype(dtype), k)
+
+
+@pytest.fixture(scope="module")
+def folds():
+    return _folds()
+
+
+LAMS = jnp.logspace(-3, 2, 31)
+
+
+def _strat(**kw):
+    kw.setdefault("g", 4)
+    kw.setdefault("block", 8)
+    return engine.PiCholeskyStrategy(**kw)
+
+
+def _train_stats(folds):
+    return (folds.hess[None] - folds.fold_hess,
+            folds.grad[None] - folds.fold_grad)
+
+
+# ----------------------------------------------------------- acceptance
+
+
+def test_warm_sweep_zero_factorizations(folds):
+    """ISSUE acceptance: cold run populates; a fresh engine over the same
+    grid with the warm cache traces ZERO cholesky calls, reports
+    n_exact_chol == 0, and reproduces the cold error grid bit-for-bit."""
+    cache = factor_cache.FactorCache()
+    cold_bk = CountingBackend(ReferenceBackend())
+    cold = engine.CVEngine(_strat(), backend=cold_bk, cache=cache)
+    r_cold = cold.run(folds, LAMS)
+    assert cold_bk.n_cholesky > 0
+    assert r_cold.extras["engine"]["cache"]["status"] == "miss"
+    assert r_cold.n_exact_chol == 4 * 4
+    assert len(cache) == 1 and cache.misses == 1
+
+    warm_bk = CountingBackend(ReferenceBackend())
+    warm = engine.CVEngine(_strat(), backend=warm_bk, cache=cache)
+    r_warm = warm.run(folds, LAMS)
+    assert warm_bk.n_cholesky == 0          # the whole point
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+    assert r_warm.n_exact_chol == 0
+    assert cache.hits == 1
+    np.testing.assert_array_equal(r_warm.errors, r_cold.errors)
+
+
+def test_cache_off_and_uncacheable_bypass(folds):
+    """cache=None keeps the fused sweep; exact/svd strategies (no
+    cache_meta support) bypass the cache even when one is supplied."""
+    r = engine.CVEngine(_strat()).run(folds, LAMS)
+    assert r.extras["engine"]["cache"] is None
+    cache = factor_cache.FactorCache()
+    r2 = engine.CVEngine("exact", cache=cache).run(folds, LAMS)
+    assert r2.extras["engine"]["cache"]["status"] == "bypass"
+    assert len(cache) == 0
+    # chol_fn override is opaque — unkeyable, must bypass
+    r3 = engine.CVEngine(_strat(chol_fn=jnp.linalg.cholesky),
+                         cache=cache).run(folds, LAMS)
+    assert r3.extras["engine"]["cache"]["status"] == "bypass"
+    np.testing.assert_allclose(r2.errors.shape, r3.errors.shape)
+
+
+# ------------------------------------------------- warm == cold property
+
+
+@given(backend=st.sampled_from(["reference", "pallas"]),
+       q=st.integers(2, 64), chunk=st.sampled_from([None, 1, 5, 7, 64]))
+@settings(max_examples=10, deadline=None)
+def test_warm_replay_matches_cold_sweep(backend, q, chunk):
+    """Property: for ANY grid over the cached anchor range — denser or
+    sparser than the cached one, larger than the anchor count (q > g) or
+    smaller, with q % lam_chunk ≠ 0 — the warm replay equals a fresh cold
+    sweep on both backends, with zero factorizations traced."""
+    folds = _folds(h=24)
+    bk = _backend(backend)
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), backend=bk, cache=cache,
+                    lam_chunk=chunk).run(folds, LAMS)   # populate
+
+    grid = jnp.logspace(-3, 2, q)         # same range ⇒ same derived anchors
+    warm_bk = CountingBackend(bk)
+    warm = engine.CVEngine(_strat(), backend=warm_bk, cache=cache,
+                           lam_chunk=chunk)
+    r_warm = warm.run(folds, grid)
+    assert warm_bk.n_cholesky == 0
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+
+    r_cold = engine.CVEngine(_strat(), backend=bk, lam_chunk=chunk
+                             ).run(folds, grid)
+    np.testing.assert_allclose(r_warm.errors, r_cold.errors,
+                               rtol=1e-9, atol=1e-12)
+    assert r_warm.best_lam == pytest.approx(r_cold.best_lam, rel=1e-9)
+
+
+def test_subgrid_slice_hits(folds):
+    """A strided subset that keeps the endpoints derives the same anchors
+    and therefore hits; q=16 is not a multiple of lam_chunk=7."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    sub = LAMS[::2]                       # 16 points, endpoints preserved
+    r = engine.CVEngine(_strat(), cache=cache, lam_chunk=7).run(folds, sub)
+    assert r.extras["engine"]["cache"]["status"] == "hit"
+    base = engine.CVEngine(_strat()).run(folds, sub)
+    np.testing.assert_allclose(r.errors, base.errors, rtol=1e-9, atol=1e-12)
+
+
+def test_warmstart_strategy_is_cacheable(folds):
+    ws = lambda: engine.PiCholeskyWarmstart(block=8, g_rest=3)  # noqa: E731
+    cache = factor_cache.FactorCache()
+    r1 = engine.CVEngine(ws(), cache=cache).run(folds, LAMS)
+    bk = CountingBackend(ReferenceBackend())
+    r2 = engine.CVEngine(ws(), backend=bk, cache=cache).run(folds, LAMS)
+    assert bk.n_cholesky == 0
+    assert r2.extras["engine"]["cache"]["status"] == "hit"
+    np.testing.assert_array_equal(r1.errors, r2.errors)
+
+
+def test_warm_replay_on_mesh(folds):
+    """Cache shards follow the folds × lams mesh (conftest forces 4 host
+    devices): warm replay under shard_map equals the unsharded sweep."""
+    cache = factor_cache.FactorCache()
+    r_cold = engine.CVEngine(_strat(), mesh="auto", cache=cache,
+                             lam_chunk=3).run(folds, LAMS)
+    assert r_cold.extras["engine"]["mesh"] is not None
+    warm = engine.CVEngine(_strat(), mesh="auto", cache=cache, lam_chunk=3)
+    r_warm = warm.run(folds, LAMS)
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+    base = engine.CVEngine(_strat()).run(folds, LAMS)
+    np.testing.assert_allclose(r_warm.errors, base.errors, rtol=1e-8)
+
+
+# ------------------------------------------------- invalidation (negative)
+
+
+def _mutations(folds):
+    return {
+        "perturbed_hessian": dict(folds=_folds(jitter=1e-2)),
+        "changed_anchor_range": dict(lams=jnp.logspace(-2, 1, 31)),
+        "changed_anchor_count": dict(strat=_strat(g=5)),
+        "changed_degree": dict(strat=_strat(degree=3)),
+        "changed_block": dict(strat=_strat(block=4)),
+        "changed_dtype": dict(folds=_folds(dtype=jnp.float32)),
+        "changed_backend": dict(backend=_backend("pallas")),
+    }
+
+
+@pytest.mark.parametrize("mutation", [
+    "perturbed_hessian", "changed_anchor_range", "changed_anchor_count",
+    "changed_degree", "changed_block", "changed_dtype", "changed_backend"])
+def test_fingerprint_mismatch_misses_and_repopulates(folds, mutation):
+    """Negative contract: every fingerprint ingredient invalidates.  The
+    mutated run MUST miss (no silent stale hit), must equal a fresh cold
+    run of the mutated problem, and must add a second entry that then
+    serves a hit for the mutated configuration."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    assert len(cache) == 1
+
+    mut = _mutations(folds)[mutation]
+    m_folds = mut.get("folds", folds)
+    m_lams = mut.get("lams", LAMS)
+    m_strat = mut.get("strat", _strat())
+    m_bk = mut.get("backend", ReferenceBackend())
+
+    r = engine.CVEngine(m_strat, backend=m_bk, cache=cache
+                        ).run(m_folds, m_lams)
+    assert r.extras["engine"]["cache"]["status"] == "miss", mutation
+    assert len(cache) == 2
+
+    fresh = engine.CVEngine(mut.get("strat", _strat()), backend=m_bk
+                            ).run(m_folds, m_lams)
+    tol = (dict(rtol=1e-7, atol=1e-9)
+           if m_folds.hess.dtype == jnp.float64   # split vs fused jit can
+           else dict(rtol=3e-5, atol=1e-6))       # fuse differently in f32
+    np.testing.assert_allclose(r.errors, fresh.errors, **tol)
+
+    # the miss repopulated: the same mutated run now hits
+    r2 = engine.CVEngine(m_strat, backend=m_bk, cache=cache
+                         ).run(m_folds, m_lams)
+    assert r2.extras["engine"]["cache"]["status"] == "hit", mutation
+    np.testing.assert_array_equal(r2.errors, r.errors)
+
+
+def test_no_silent_stale_hit_after_perturbation(folds):
+    """The stale answer is numerically wrong for the perturbed problem —
+    prove the cache never returns it."""
+    cache = factor_cache.FactorCache()
+    r_orig = engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    perturbed = _folds(jitter=5e-2)
+    r_pert = engine.CVEngine(_strat(), cache=cache).run(perturbed, LAMS)
+    assert r_pert.extras["engine"]["cache"]["status"] == "miss"
+    assert not np.allclose(r_pert.errors, r_orig.errors)   # stale ≠ right
+    fresh = engine.CVEngine(_strat()).run(perturbed, LAMS)
+    np.testing.assert_allclose(r_pert.errors, fresh.errors,
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_reuse_false_is_write_only(folds):
+    cache = factor_cache.FactorCache()
+    eng = engine.CVEngine(_strat(), cache=cache, reuse=False)
+    r1 = eng.run(folds, LAMS)
+    r2 = eng.run(folds, LAMS)
+    assert {r1.extras["engine"]["cache"]["status"],
+            r2.extras["engine"]["cache"]["status"]} == {"miss"}
+    assert cache.hits == 0 and len(cache) == 1   # same digest, overwritten
+    with pytest.raises(ValueError, match="reuse"):
+        engine.CVEngine(_strat(), cache=cache, reuse="bogus")
+
+
+# ----------------------------------------------- covering + anchor reuse
+
+
+def test_covering_policy_serves_subrange(folds):
+    """reuse='covering' replays a cached Θ whose anchor range covers the
+    requested grid; 'exact' refuses the same request.  The replayed values
+    equal solving straight from the cached interpolant."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    sub = jnp.logspace(-2, 1, 21)
+
+    bk = CountingBackend(ReferenceBackend())
+    cov = engine.CVEngine(_strat(), backend=bk, cache=cache,
+                          reuse="covering")
+    r = cov.run(folds, sub)
+    assert r.extras["engine"]["cache"]["status"] == "hit"
+    assert bk.n_cholesky == 0
+
+    # oracle: per-fold interp_solve from the cached state, no engine
+    entry = next(iter(cache.entries.values()))
+    _, g_tr = _train_stats(folds)
+    errs = []
+    for f in range(4):
+        model = picholesky.PiCholesky(theta=entry.state.theta[f],
+                                      center=entry.state.center[f],
+                                      h=entry.state.h,
+                                      block=entry.state.block)
+        thetas = model.solve(sub, g_tr[f])
+        pred = jnp.einsum("nh,qh->qn", folds.x_folds[f], thetas)
+        mse = jnp.mean((pred - folds.y_folds[f][None]) ** 2, axis=1)
+        errs.append(jnp.sqrt(mse) / (jnp.std(folds.y_folds[f]) + 1e-30))
+    np.testing.assert_allclose(r.errors, np.mean(errs, axis=0),
+                               rtol=1e-9, atol=1e-12)
+
+    r_exact = engine.CVEngine(_strat(), cache=cache, reuse="exact"
+                              ).run(folds, sub)
+    assert r_exact.extras["engine"]["cache"]["status"] == "miss"
+
+
+def test_covering_serves_tightest_range_and_reports_it(folds):
+    """With several covering entries, the narrowest anchor range wins (its
+    Θ answers the sub-range most accurately) and the result carries the
+    SERVED entry's digest, not the requested key's."""
+    cache = factor_cache.FactorCache()
+    wide = jnp.logspace(-5, 4, 31)
+    narrow = jnp.logspace(-3, 2, 31)
+    engine.CVEngine(_strat(), cache=cache).run(folds, wide)    # inserted 1st
+    engine.CVEngine(_strat(), cache=cache).run(folds, narrow)
+    narrow_digest = [e.key.digest() for e in cache.entries.values()
+                     if max(e.key.anchors) < 1e3]
+    assert len(narrow_digest) == 1
+
+    sub = jnp.logspace(-2, 1, 11)           # covered by both
+    r = engine.CVEngine(_strat(), cache=cache, reuse="covering"
+                        ).run(folds, sub)
+    info = r.extras["engine"]["cache"]
+    assert info["status"] == "hit"
+    assert info["digest"] == narrow_digest[0][:12]
+
+
+def test_anchor_refit_skips_factorization(folds):
+    """cache_anchors=True stores the per-(fold, λ_s) packed factors; a
+    degree change over the same anchors refits Θ from them — status
+    'refit', zero factorizations, same answer as a cold degree-3 fit."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(degree=2), cache=cache,
+                    cache_anchors=True).run(folds, LAMS)
+    entry = next(iter(cache.entries.values()))
+    assert isinstance(entry.anchors, packing.PackedFactor)
+    assert entry.anchors.vec.shape == (4, 4, packing.packed_size(32, 8))
+
+    bk = CountingBackend(ReferenceBackend())
+    eng = engine.CVEngine(_strat(degree=3), backend=bk, cache=cache,
+                          cache_anchors=True)
+    r = eng.run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] == "refit"
+    assert bk.n_cholesky == 0 and r.n_exact_chol == 0
+    fresh = engine.CVEngine(_strat(degree=3)).run(folds, LAMS)
+    np.testing.assert_allclose(r.errors, fresh.errors, rtol=1e-7, atol=1e-9)
+    assert len(cache) == 2                  # refit result cached too
+    r2 = engine.CVEngine(_strat(degree=3), cache=cache).run(folds, LAMS)
+    assert r2.extras["engine"]["cache"]["status"] == "hit"
+
+
+# ------------------------------------------------------------ persistence
+
+
+def test_cache_save_load_sweep_parity_bitwise(folds, tmp_path):
+    """save → load → warm sweep is bit-for-bit identical to the in-memory
+    warm sweep on the reference backend (satellite: checkpoint round-trip
+    through repro.checkpoint.CheckpointManager)."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache, cache_anchors=True
+                    ).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert sorted(loaded.entries) == sorted(cache.entries)
+    (orig,), (back,) = cache.entries.values(), loaded.entries.values()
+    np.testing.assert_array_equal(orig.state.theta, back.state.theta)
+    np.testing.assert_array_equal(orig.anchors.vec, back.anchors.vec)
+    assert (back.state.h, back.state.block) == (orig.state.h,
+                                                orig.state.block)
+
+    r_mem = engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    r_disk = engine.CVEngine(_strat(), cache=loaded).run(folds, LAMS)
+    assert r_disk.extras["engine"]["cache"]["status"] == "hit"
+    np.testing.assert_array_equal(r_mem.errors, r_disk.errors)
+
+
+def test_cache_load_skips_corrupt_entries(folds, tmp_path):
+    """A torn write (corrupted leaf) drops that entry on load — never a
+    half-loaded state — while intact entries survive."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    engine.CVEngine(_strat(g=5), cache=cache).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    victim = os.path.join(str(tmp_path), "step_000000000000",
+                          "leaf_000000.npy")
+    with open(victim, "r+b") as f:
+        f.seek(128)
+        f.write(b"\xde\xad\xbe\xef")
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert len(loaded) == 1
+    assert len(factor_cache.FactorCache.load(str(tmp_path / "nowhere"))) == 0
+
+
+def test_cache_resave_never_rewrites_referenced_steps(folds, tmp_path):
+    """Re-saving a grown cache takes fresh step numbers (a torn second
+    save must leave the first index's steps untouched), prunes only after
+    the index flips, and the final state loads completely."""
+    from repro.checkpoint import CheckpointManager
+
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    first_steps = set(CheckpointManager(str(tmp_path), keep=None).all_steps())
+
+    engine.CVEngine(_strat(g=5), cache=cache).run(folds, LAMS)
+    engine.CVEngine(_strat(g=6), cache=cache).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    second_steps = set(CheckpointManager(str(tmp_path), keep=None).all_steps())
+    assert not (first_steps & second_steps)      # never rewritten in place
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert sorted(loaded.entries) == sorted(cache.entries)
+    r1 = engine.CVEngine(_strat(g=6), cache=cache).run(folds, LAMS)
+    r2 = engine.CVEngine(_strat(g=6), cache=loaded).run(folds, LAMS)
+    np.testing.assert_array_equal(r1.errors, r2.errors)
+
+
+def test_cache_key_fingerprint_fields(folds):
+    h_tr, _ = _train_stats(folds)
+    meta = _strat().cache_meta(LAMS)
+    key = factor_cache.make_key(h_tr, meta["anchors"], block=8,
+                                backend="reference", params=meta["params"])
+    assert len(key.fold_hashes) == 4 and key.h == 32
+    assert key.dtype == "float64" and key.backend == "reference"
+    # digest is content-derived and stable across reconstruction
+    key2 = factor_cache.CacheKey.from_json(key.to_json())
+    assert key2.digest() == key.digest()
+    # anchor digest ignores the polynomial, base digest ignores anchors
+    meta3 = _strat(degree=3).cache_meta(LAMS)
+    key3 = factor_cache.make_key(h_tr, meta3["anchors"], block=8,
+                                 backend="reference", params=meta3["params"])
+    assert key3.digest() != key.digest()
+    assert key3.anchor_digest() == key.anchor_digest()
+    assert key3.base_digest() != key.base_digest()

@@ -150,6 +150,63 @@ def test_fit_consumes_packed_factors():
         picholesky.fit(a, sample, 2, block=16, factors=pf)
 
 
+# ---------------------------------------- escape hatches vs dense oracle
+
+
+@pytest.mark.parametrize("h,block", [(5, 8), (13, 8), (37, 8), (27, 16),
+                                     (61, 16)])
+def test_dense_escape_hatch_non_tile_multiple(h, block):
+    """PackedFactor.dense() at sizes that are NOT a multiple of the tile
+    (incl. h < block): round-trips the exact factor and solve_packed_ref
+    matches a dense ``jnp.linalg`` oracle, single and multi RHS."""
+    a = _spd(h, seed=h)
+    l = jnp.linalg.cholesky(a)
+    pf = packing.PackedFactor.from_dense(l, block)
+    np.testing.assert_allclose(pf.dense(), l, atol=1e-12)
+    rng = np.random.RandomState(h)
+    g1 = jnp.asarray(rng.randn(h))
+    gq = jnp.asarray(rng.randn(h, 3))
+    np.testing.assert_allclose(
+        packing.solve_packed_ref(pf.vec, g1, h, block),
+        jnp.linalg.solve(a, g1), rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(
+        packing.solve_packed_ref(pf.vec, gq, h, block),
+        jnp.linalg.solve(a, gq), rtol=1e-8, atol=1e-10)
+
+
+def test_eval_factor_non_tile_multiple_vs_dense_fit():
+    """The interpolant's dense escape hatch agrees with a dense-domain
+    polynomial fit when h % block ≠ 0 (padding columns must not leak)."""
+    h, block = 21, 8
+    a = _spd(h)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, 5)
+    model = picholesky.fit(a, sample, 2, block=block)
+    lams = jnp.logspace(-2, 0, 4)
+    dense = model.eval_factor(lams)
+    assert dense.shape == (4, h, h)
+    # oracle: fit each dense entry directly (full-matrix vectorization)
+    ls = jax.vmap(lambda lam: jnp.linalg.cholesky(a + lam * jnp.eye(h))
+                  )(sample)
+    v = picholesky.vandermonde(sample, 2)
+    theta = jnp.linalg.solve(v.T @ v, v.T @ ls.reshape(5, -1))
+    expect = (picholesky.vandermonde(lams, 2) @ theta).reshape(4, h, h)
+    np.testing.assert_allclose(dense, jnp.tril(expect), rtol=1e-7, atol=1e-9)
+
+
+def test_packed_factor_vec_size_validated():
+    """A vec whose length disagrees with (h, block) fails at construction,
+    not deep inside a tile reshape."""
+    good = packing.PackedFactor(vec=jnp.zeros(packing.packed_size(32, 8)),
+                                h=32, block=8)
+    assert good.n_blocks == 10
+    with pytest.raises(ValueError, match="packed_size"):
+        packing.PackedFactor(vec=jnp.zeros(17), h=32, block=8)
+    # non-array leaves (specs/placeholders from tree ops) must still pass
+    from jax.sharding import PartitionSpec
+    pf = jax.tree.map(lambda _: PartitionSpec("folds"), good)
+    assert isinstance(pf, packing.PackedFactor)
+
+
 # ------------------------------------------------- chunked λ-sweep parity
 
 
