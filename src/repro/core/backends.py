@@ -21,6 +21,7 @@ Kernel imports happen lazily inside the Pallas methods so importing
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Union
@@ -217,11 +218,23 @@ class CountingBackend(LinalgBackend):
     computation graph contains *no* factorization keeps the counter at
     zero, while any cold path (however batched) moves it.  Keeps the inner
     backend's ``name`` so cache fingerprints are unaffected by counting.
+
+    Counting is **stage-granular**: the pipelined sweep wraps each stage's
+    trace in :meth:`stage`, so :attr:`by_stage` attributes every counted op
+    (``cholesky`` and the λ-stage workhorses ``interp_solve`` /
+    ``solve_packed``) to the stage whose computation graph contains it —
+    e.g. a cold piCholesky sweep counts its factorizations under
+    ``'fold_state'`` and only fused interpolant solves under
+    ``'fold_errors'``; calls traced outside any scope land in
+    ``'unstaged'``.  Like the flat counter, attribution happens at trace
+    time: re-executing a compiled stage moves nothing.
     """
 
     def __init__(self, inner: LinalgBackend):
         self.inner = inner
         self.n_cholesky = 0
+        self.by_stage: dict = {}      # stage label -> {op: trace-site count}
+        self._stage: str | None = None
 
     @property
     def name(self) -> str:          # fingerprint-transparent
@@ -229,9 +242,28 @@ class CountingBackend(LinalgBackend):
 
     def reset(self) -> None:
         self.n_cholesky = 0
+        self.by_stage = {}
+
+    @contextlib.contextmanager
+    def stage(self, label: str):
+        """Attribute ops traced inside this scope to ``label`` (reentrant —
+        nested scopes restore the outer label on exit)."""
+        prev, self._stage = self._stage, label
+        try:
+            yield self
+        finally:
+            self._stage = prev
+
+    def stage_count(self, label: str, op: str = "cholesky") -> int:
+        return self.by_stage.get(label, {}).get(op, 0)
+
+    def _count(self, op: str) -> None:
+        rec = self.by_stage.setdefault(self._stage or "unstaged", {})
+        rec[op] = rec.get(op, 0) + 1
 
     def cholesky(self, a):
         self.n_cholesky += 1
+        self._count("cholesky")
         return self.inner.cholesky(a)
 
     def solve_lower(self, l, b, *, transpose=False):
@@ -247,9 +279,11 @@ class CountingBackend(LinalgBackend):
         return self.inner.unpack_tril(vec, h, block)
 
     def solve_packed(self, pf, g):
+        self._count("solve_packed")
         return self.inner.solve_packed(pf, g)
 
     def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+        self._count("interp_solve")
         return self.inner.interp_solve(theta, lams, g, h=h, block=block,
                                        center=center)
 

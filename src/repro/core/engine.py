@@ -27,7 +27,15 @@ This module runs the whole grid as **one jitted computation**:
   is content-fingerprinted and reused, skipping the heavy ``fold_state``
   stage entirely — a warm sweep performs *zero* Cholesky factorizations
   and replays any grid over the cached anchor range through the fused
-  ``interp_solve`` chunked stream.
+  ``interp_solve`` chunked stream,
+* the same seam also drives the **pipelined staged sweep**
+  (:meth:`CVEngine.sweep_async` / :meth:`CVEngine.run_async`): per-fold
+  ``fold_state`` stages dispatch without blocking (double-buffered donated
+  Hessian slices), the λ grid streams through one jitted chunk stage, each
+  completed chunk is yielded as a partial hold-out curve, and the
+  early-stop search (``stop_tol=``) terminates the stream once the running
+  minimum stops improving — the hold-out curve is evaluated only as far as
+  selection needs it.
 
 Algorithms plug in through the small :class:`CVStrategy` protocol; the five
 paper algorithms (`exact`, `picholesky`, `picholesky_warmstart`, `svd`,
@@ -51,8 +59,10 @@ so there is no dense grid to batch.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Optional, Protocol, Union, runtime_checkable
+from typing import (Any, Callable, Iterator, Optional, Protocol, Union,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +78,7 @@ from .backends import BackendLike, LinalgBackend, resolve_backend
 from .folds import CVResult, FoldData, holdout_nrmse
 
 __all__ = [
-    "CVStrategy", "CVEngine", "make_strategy", "STRATEGIES",
+    "CVStrategy", "CVEngine", "SweepChunk", "make_strategy", "STRATEGIES",
     "ExactCholesky", "PiCholeskyStrategy", "PiCholeskyWarmstart",
     "SVDStrategy", "PinrmseStrategy",
 ]
@@ -110,6 +120,12 @@ class CVStrategy(Protocol):
 
 class StrategyBase:
     """Default no-op prepare/fold_state for strategies that don't need them."""
+
+    #: True when ``fold_state`` reads the per-fold train Hessian — the
+    #: pipelined sweep donates each fold's Hessian slice into the per-fold
+    #: state stage only then (donating an unread buffer is an XLA warning,
+    #: not a win).
+    state_uses_hessian: bool = False
 
     def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
         return ()
@@ -177,6 +193,7 @@ class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
     basis: str = "monomial"
     chol_fn: Optional[Callable] = None
     name: str = "picholesky"
+    state_uses_hessian = True
 
     def n_exact_chol(self, k, q):
         return k * self.g
@@ -242,6 +259,7 @@ class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
     block: int = 128
     chol_fn: Optional[Callable] = None
     name: str = "picholesky_warmstart"
+    state_uses_hessian = True
 
     def n_exact_chol(self, k, q):
         # anchor fit + one refresh per fold (fold 0's refresh included:
@@ -386,6 +404,29 @@ def make_strategy(name: str, **params) -> CVStrategy:
 MeshLike = Union[None, str, Mesh]
 
 
+@dataclasses.dataclass
+class SweepChunk:
+    """One completed λ chunk of a pipelined sweep — a partial error curve.
+
+    Yielded by :meth:`CVEngine.sweep_async` as each chunk's hold-out errors
+    land on the host; ``best_lam`` / ``best_error`` track the running
+    minimum over everything streamed so far, and ``stopped`` marks the
+    chunk at which the early-stop search terminated the stream.
+    """
+
+    index: int               # chunk position in the stream
+    start: int               # global λ-grid offset of this chunk's first λ
+    n_chunks: int            # chunks the full stream would have
+    lams: np.ndarray         # (c,) this chunk's λs (padding stripped)
+    fold_errors: np.ndarray  # (k, c) per-fold hold-out errors
+    errors: np.ndarray       # (c,) fold-mean partial curve
+    best_lam: float          # running argmin λ over all streamed chunks
+    best_error: float        # running min mean error
+    stopped: bool            # early stop fired at this chunk
+    n_exact_chol: int        # factorizations for the grid evaluated so far
+    cache: Optional[dict]    # warm-replay cache info (None without a cache)
+
+
 #: HBM/VMEM budget (bytes) the ``lam_chunk='auto'`` heuristic sizes the
 #: per-chunk packed-factor working set against — one VMEM's worth, so the
 #: streamed sweep's λ-dependent footprint matches what a TPU core can hold.
@@ -459,6 +500,9 @@ class CVEngine:
         self._sweeps: dict = {}   # mesh-key -> jitted fused sweep fn
         self._states: dict = {}   # (mesh-key, with_anchors) -> jitted state fn
         self._replays: dict = {}  # mesh-key -> jitted replay fn
+        self._chunks: dict = {}   # mesh-key -> jitted per-chunk errors fn
+        self._fold_states: dict = {}   # with_anchors -> jitted 1-fold state fn
+        self._prepare = None      # jitted replicated prepare stage
         self._split = jax.jit(
             lambda hess, grad, fh, fg: (hess[None] - fh, grad[None] - fg))
 
@@ -474,6 +518,19 @@ class CVEngine:
                 return None
             return shardlib.make_cv_mesh(k)
         raise ValueError(f"mesh must be None, 'auto' or a Mesh; got {self.mesh!r}")
+
+    @staticmethod
+    def _check_fold_axis(mesh: Optional[Mesh], k: int) -> None:
+        """Fail with the engine's error, not a shard_map internal one, when
+        the fold count does not tile the mesh's fold axis (folds cannot be
+        padded — the count is fixed by the problem)."""
+        if mesh is None:
+            return
+        n_fold = mesh.shape[shardlib.CV_FOLD_AXIS]
+        if k % n_fold:
+            raise ValueError(
+                f"{k} folds not divisible by mesh axis "
+                f"{shardlib.CV_FOLD_AXIS}={n_fold}")
 
     # -- λ chunking --------------------------------------------------------
 
@@ -662,6 +719,326 @@ class CVEngine:
 
         return jax.jit(jax.vmap(one))(jnp.asarray(pf.vec))
 
+    # -- pipelined staged sweep -------------------------------------------
+    #
+    # The fold_state / fold_errors seam, driven from the host: per-fold
+    # state stages dispatch without blocking (bounded by a depth-2
+    # StageRing so at most two donated Hessian slices are in flight), the
+    # λ grid streams through one jitted chunk stage, and each completed
+    # chunk surfaces as a partial hold-out curve the early-stop search can
+    # act on.  `pipelined=False` runs the *same* jitted stage functions
+    # with a block after every dispatch — the serial reference the parity
+    # tests compare bit-for-bit against.
+
+    def _stage_scope(self, label: str):
+        """Counting scope for stage-granular backends (CountingBackend);
+        a no-op context for plain backends."""
+        stage = getattr(self._bk, "stage", None)
+        return stage(label) if callable(stage) else contextlib.nullcontext()
+
+    def _prepare_fn(self):
+        if self._prepare is None:
+            strat, bk = self.strategy, self._bk
+            self._prepare = jax.jit(
+                lambda h_tr, g_tr, x, y, lams: strat.prepare(
+                    x, y, h_tr, g_tr, lams, bk))
+        return self._prepare
+
+    def _fold_state_fn(self, with_anchors: bool):
+        """Jitted single-fold ``fold_state`` — the pipelined sweep's unit of
+        dispatch.  The fold's Hessian slice (an engine-owned copy) is
+        donated when the strategy actually consumes it."""
+        if with_anchors not in self._fold_states:
+            strat, bk = self.strategy, self._bk
+
+            def one(f, h_f, g_f, aux):
+                if with_anchors:
+                    return strat.fold_state_and_anchors(f, h_f, g_f, aux, bk)
+                return (strat.fold_state(f, h_f, g_f, aux, bk),
+                        jnp.zeros((0,), h_f.dtype))
+
+            donate = ((1,) if self.donate
+                      and getattr(strat, "state_uses_hessian", False) else ())
+            self._fold_states[with_anchors] = jax.jit(one,
+                                                      donate_argnums=donate)
+        return self._fold_states[with_anchors]
+
+    def _build_chunk_errors(self, mesh: Optional[Mesh]):
+        strat, bk = self.strategy, self._bk
+
+        def core(state, f_idx, h_tr, g_tr, x_folds, y_folds, lams_c, aux):
+            return jax.vmap(
+                lambda st, f, h, g, x, y: strat.fold_errors(
+                    st, f, h, g, x, y, lams_c, aux, bk)
+            )(state, f_idx, h_tr, g_tr, x_folds, y_folds)
+
+        def chunk_errors(state, f_idx, h_tr, g_tr, x_folds, y_folds,
+                         lams_c, aux):
+            if mesh is None:
+                return core(state, f_idx, h_tr, g_tr, x_folds, y_folds,
+                            lams_c, aux)
+            sharded = shard_map(
+                core, mesh=mesh,
+                in_specs=shardlib.cv_chunk_in_specs(state, aux),
+                out_specs=P(shardlib.CV_FOLD_AXIS, shardlib.CV_LAM_AXIS),
+                check_rep=False,
+            )
+            return sharded(state, f_idx, h_tr, g_tr, x_folds, y_folds,
+                           lams_c, aux)
+
+        return jax.jit(chunk_errors)
+
+    def _chunk_errors_fn(self, mesh: Optional[Mesh]):
+        key = self._mesh_key(mesh)
+        if key not in self._chunks:
+            self._chunks[key] = self._build_chunk_errors(mesh)
+        return self._chunks[key]
+
+    def _pipelined_state(self, mesh, h_tr, g_tr, folds: FoldData, lams,
+                         with_anchors: bool, pipelined: bool):
+        """Cold ``fold_state`` stage of the staged sweep.
+
+        Unsharded: per-fold jitted dispatches through a depth-2
+        :class:`~repro.distributed.sharding.StageRing` — fold f+1's anchor
+        factorizations sit in the device queue (with their donated Hessian
+        slices) while fold f's output is still being computed, and the ring
+        bounds in-flight donated buffers to two.  With a mesh, the stage is
+        one fold-sharded batched call: the folds factorize in parallel
+        across the fold axis instead of in dispatch order (no donation —
+        the chunk stage reads ``h_tr`` again).
+
+        Returns ``(batched state, packed anchors | None, aux)``.
+        """
+        strat = self.strategy
+        with self._stage_scope("prepare"):
+            aux = self._prepare_fn()(h_tr, g_tr, folds.x_folds,
+                                     folds.y_folds, lams)
+        if not pipelined:
+            jax.block_until_ready(aux)
+        if mesh is not None:
+            with self._stage_scope("fold_state"):
+                state, avec = self._staged_state_fn(mesh, with_anchors)(
+                    jnp.arange(h_tr.shape[0]), h_tr, g_tr, aux)
+            if not pipelined:
+                jax.block_until_ready((state, avec))
+        else:
+            fn = self._fold_state_fn(with_anchors)
+            ring = shardlib.StageRing(depth=2)
+            outs = []
+            with self._stage_scope("fold_state"):
+                for f in range(h_tr.shape[0]):
+                    staged = fn(jnp.asarray(f), h_tr[f], g_tr[f], aux)
+                    outs.append(ring.admit(staged))
+                    if not pipelined:
+                        jax.block_until_ready(staged)
+            state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[s for s, _ in outs])
+            avec = jnp.stack([a for _, a in outs])
+        pf = (packing.PackedFactor(vec=avec, h=h_tr.shape[-1],
+                                   block=strat.block)
+              if with_anchors else None)
+        return state, pf, aux
+
+    def _staged_state_fn(self, mesh: Mesh, with_anchors: bool):
+        """Fold-sharded batched state stage taking a precomputed ``aux``
+        (unlike :meth:`_state_fn`, which runs ``prepare`` inside its jit —
+        the staged sweep computes ``aux`` once and shares it with the chunk
+        stage, so ``prepare``'s factorizations are never traced twice)."""
+        key = ("staged", self._mesh_key(mesh), with_anchors)
+        if key not in self._states:
+            strat, bk = self.strategy, self._bk
+
+            def core(f_idx, h_tr, g_tr, aux):
+                def one(f, h_f, g_f):
+                    if with_anchors:
+                        return strat.fold_state_and_anchors(f, h_f, g_f,
+                                                            aux, bk)
+                    return strat.fold_state(f, h_f, g_f, aux, bk), \
+                        jnp.zeros((0,), h_f.dtype)
+                return jax.vmap(one)(f_idx, h_tr, g_tr)
+
+            def statef(f_idx, h_tr, g_tr, aux):
+                fold_ax = shardlib.CV_FOLD_AXIS
+                repl = jax.tree.map(lambda _: P(), aux)
+                sharded = shard_map(
+                    core, mesh=mesh,
+                    in_specs=(P(fold_ax), P(fold_ax), P(fold_ax), repl),
+                    out_specs=(P(fold_ax), P(fold_ax)),
+                    check_rep=False,
+                )
+                return sharded(f_idx, h_tr, g_tr, aux)
+
+            self._states[key] = jax.jit(statef)
+        return self._states[key]
+
+    def sweep_async(self, folds: FoldData, lams: jax.Array, *,
+                    stop_tol: Optional[float] = None, stop_patience: int = 2,
+                    pipelined: bool = True) -> Iterator[SweepChunk]:
+        """Pipelined staged sweep — yields a :class:`SweepChunk` per λ chunk.
+
+        Parameters
+        ----------
+        stop_tol:      ``None`` disables early stopping.  A float ≥ 0
+                       enables the early-stop λ-search: a chunk *improves*
+                       when its minimum mean error drops below
+                       ``best · (1 − stop_tol)``; after ``stop_patience``
+                       consecutive non-improving chunks the stream stops.
+                       ``stop_tol=0`` stops only on strict non-improvement,
+                       so on a unimodal hold-out curve the returned minimum
+                       is exactly the full grid's argmin.
+        stop_patience: consecutive non-improving chunks tolerated before
+                       stopping (default 2).
+        pipelined:     ``True`` dispatches stages without blocking — the
+                       device queue overlaps fold f+1's factorizations with
+                       fold f's chunk streaming, and full sweeps keep one
+                       chunk of dispatch lookahead.  ``False`` blocks after
+                       every stage (the serial reference).  Both orders run
+                       the *same* jitted stage functions on the same
+                       inputs, so their error curves are **bit-for-bit
+                       identical** — pipelining reorders dispatch, never
+                       math.
+
+        Composes with the warm-replay cache exactly like :meth:`run`: a hit
+        skips the state stage and streams the cached Θ through the chunk
+        stage; a miss runs the cold stage and populates the cache *before*
+        the λ stream starts, so an early-stopped sweep still leaves a
+        complete, replayable entry (the fit is λ-grid independent — only
+        the curve evaluation is truncated).
+        """
+        if stop_tol is not None and stop_tol < 0:
+            raise ValueError(f"stop_tol must be >= 0 or None, got {stop_tol}")
+        if stop_patience < 1:
+            raise ValueError(
+                f"stop_patience must be >= 1, got {stop_patience}")
+        lams = jnp.asarray(lams)
+        lams_np = np.asarray(lams)
+        k = folds.fold_hess.shape[0]
+        q = int(lams.shape[0])
+        h = folds.fold_hess.shape[-1]
+        mesh = self._resolve_mesh(k)
+        self._check_fold_axis(mesh, k)
+        h_tr, g_tr = self._split(folds.hess, folds.grad,
+                                 folds.fold_hess, folds.fold_grad)
+        strat, bk = self.strategy, self._bk
+
+        # fixed-size chunk schedule (last chunk edge-padded) so one jitted
+        # chunk stage serves the whole stream
+        chunk = self._resolve_chunk(q, h, h_tr.dtype)
+        if chunk is None or chunk > q:
+            chunk = q
+        if mesh is not None:
+            chunk += (-chunk) % mesh.shape[shardlib.CV_LAM_AXIS]
+        chunks, _ = shardlib.chunk_lams(lams, chunk)
+        n_c = chunks.shape[0]
+
+        # ---- state stage (cache dispatch identical to run()) ------------
+        meta = (strat.cache_meta(lams)
+                if self.cache is not None and hasattr(strat, "cache_meta")
+                else None)
+        aux: Any = ()
+        warm = False
+        if meta is not None:
+            key = cachelib.make_key(
+                h_tr, meta["anchors"], block=meta["params"]["block"],
+                backend=bk.name, params=meta["params"])
+
+            def cold_state(with_anchors):
+                state, pf, _ = self._pipelined_state(
+                    mesh, h_tr, g_tr, folds, lams, with_anchors, pipelined)
+                return state, pf
+
+            entry, status = self._acquire_cached_state(meta, key, cold_state)
+            state = entry.state
+            warm = status != "miss"
+            cache_info = dict(status=status, digest=entry.key.digest()[:12],
+                              policy=self.reuse, **self.cache.stats)
+            # replay contract: fold_errors of a cacheable strategy never
+            # reads aux, so the chunk stage streams with aux=() on both the
+            # warm and the just-populated cold path
+        else:
+            state, _, aux = self._pipelined_state(
+                mesh, h_tr, g_tr, folds, lams, False, pipelined)
+            cache_info = (None if self.cache is None
+                          else dict(status="bypass"))
+
+        # ---- λ-chunk stream ---------------------------------------------
+        f_idx = jnp.arange(k)
+        chunk_fn = self._chunk_errors_fn(mesh)
+
+        def dispatch(c):
+            with self._stage_scope("fold_errors"):
+                return chunk_fn(state, f_idx, h_tr, g_tr, folds.x_folds,
+                                folds.y_folds, chunks[c], aux)
+
+        # full pipelined sweeps keep one chunk of dispatch lookahead; the
+        # early-stop search dispatches chunk-by-chunk (the decision is the
+        # sync point), and the serial reference blocks on every stage
+        lookahead = pipelined and stop_tol is None
+        best = np.inf
+        best_lam = float("nan")
+        streak = 0
+        n_eval = 0
+        nxt = dispatch(0) if lookahead else None
+        for c in range(n_c):
+            e = nxt if nxt is not None else dispatch(c)
+            nxt = dispatch(c + 1) if lookahead and c + 1 < n_c else None
+            if not pipelined:
+                jax.block_until_ready(e)
+            width = min(chunk, q - c * chunk)
+            fold_errs = np.asarray(e)[:, :width]    # syncs this chunk only
+            mean = fold_errs.mean(0)
+            i = int(np.argmin(mean))
+            n_eval += width
+            improved = (bool(mean[i] < best * (1.0 - stop_tol))
+                        if stop_tol is not None and np.isfinite(best)
+                        else bool(mean[i] < best))
+            if mean[i] < best:      # strict: ties keep the earlier λ,
+                best = float(mean[i])   # matching np.argmin on the full curve
+                best_lam = float(lams_np[c * chunk + i])
+            streak = 0 if improved else streak + 1
+            stopped = (stop_tol is not None and streak >= stop_patience
+                       and c + 1 < n_c)
+            yield SweepChunk(
+                index=c, start=c * chunk, n_chunks=n_c,
+                lams=lams_np[c * chunk: c * chunk + width],
+                fold_errors=fold_errs, errors=mean,
+                best_lam=best_lam, best_error=float(best),
+                stopped=stopped,
+                n_exact_chol=0 if warm else strat.n_exact_chol(k, n_eval),
+                cache=cache_info)
+            if stopped:
+                return
+
+    def run_async(self, folds: FoldData, lams: jax.Array, *,
+                  stop_tol: Optional[float] = None, stop_patience: int = 2,
+                  pipelined: bool = True) -> CVResult:
+        """Consume :meth:`sweep_async` into a :class:`CVResult`.
+
+        With early stopping the result covers the evaluated prefix of the
+        grid (``extras['engine']['async']`` records how far the stream ran
+        and whether it stopped); without it this is the staged equivalent
+        of :meth:`run`.
+        """
+        parts = list(self.sweep_async(folds, lams, stop_tol=stop_tol,
+                                      stop_patience=stop_patience,
+                                      pipelined=pipelined))
+        last = parts[-1]
+        errors = np.concatenate([p.errors for p in parts])
+        lams_eval = np.concatenate([p.lams for p in parts])
+        mesh = self._resolve_mesh(folds.fold_hess.shape[0])
+        meta = dict(
+            strategy=self.strategy.name, backend=self._bk.name,
+            mesh=None if mesh is None else dict(mesh.shape),
+            donated=bool(self.donate), lam_chunk=self.lam_chunk,
+            cache=last.cache)
+        meta["async"] = dict(
+            pipelined=pipelined, stop_tol=stop_tol,
+            stop_patience=stop_patience, stopped=last.stopped,
+            chunks_evaluated=len(parts), chunks_total=last.n_chunks,
+            lams_evaluated=int(errors.shape[0]))
+        return CVResult.from_errors(lams_eval, errors, last.n_exact_chol,
+                                    engine=meta)
+
     # -- public API -------------------------------------------------------
 
     def sweep_temp_bytes(self, folds: FoldData, lams: jax.Array) -> int:
@@ -680,22 +1057,21 @@ class CVEngine:
                                              folds.y_folds, lams)
         return int(lowered.compile().memory_analysis().temp_size_in_bytes)
 
-    def _run_cached(self, meta: dict, mesh, h_tr, g_tr, folds: FoldData,
-                    lams_run: jax.Array, q: int):
-        """Warm-replay dispatch: fingerprint → (hit | anchor refit | cold
-        populate) → replay.  Returns (error grid, cache_info, n_chol)."""
-        strat, cache = self.strategy, self.cache
-        key = cachelib.make_key(
-            h_tr, meta["anchors"], block=meta["params"]["block"],
-            backend=self._bk.name, params=meta["params"])
-        k = h_tr.shape[0]
+    def _acquire_cached_state(self, meta: dict, key, cold_state_fn):
+        """Cache dispatch shared by :meth:`run` and :meth:`sweep_async`:
+        fingerprint → (hit | anchor refit | cold populate).
 
+        ``cold_state_fn(with_anchors)`` computes the batched cold state,
+        returning ``(state, packed_anchors | None)``.  Returns
+        ``(entry, status)``.
+        """
+        strat, cache = self.strategy, self.cache
         if self.reuse:
             entry = cache.lookup(key, self.reuse)
         else:
             entry = None
             cache.misses += 1     # write-only runs are misses by definition
-        status, n_chol = "hit", 0
+        status = "hit"
         if entry is None:
             with_anchors = (self.cache_anchors
                             and hasattr(strat, "fold_state_and_anchors"))
@@ -708,19 +1084,36 @@ class CVEngine:
                 entry = cache.put(key, state, cached_pf)
                 status = "refit"
             else:
-                state, avec = self._state_fn(mesh, with_anchors)(
-                    h_tr, g_tr, folds.x_folds, folds.y_folds, lams_run)
-                pf = (packing.PackedFactor(vec=avec, h=h_tr.shape[-1],
-                                           block=meta["params"]["block"])
-                      if with_anchors else None)
+                state, pf = cold_state_fn(with_anchors)
                 entry = cache.put(key, state, pf)
-                status, n_chol = "miss", strat.n_exact_chol(k, q)
+                status = "miss"
+        return entry, status
+
+    def _run_cached(self, meta: dict, mesh, h_tr, g_tr, folds: FoldData,
+                    lams_run: jax.Array, q: int):
+        """Warm-replay dispatch: fingerprint → (hit | anchor refit | cold
+        populate) → replay.  Returns (error grid, cache_info, n_chol)."""
+        key = cachelib.make_key(
+            h_tr, meta["anchors"], block=meta["params"]["block"],
+            backend=self._bk.name, params=meta["params"])
+        k = h_tr.shape[0]
+
+        def cold_state(with_anchors):
+            state, avec = self._state_fn(mesh, with_anchors)(
+                h_tr, g_tr, folds.x_folds, folds.y_folds, lams_run)
+            pf = (packing.PackedFactor(vec=avec, h=h_tr.shape[-1],
+                                       block=meta["params"]["block"])
+                  if with_anchors else None)
+            return state, pf
+
+        entry, status = self._acquire_cached_state(meta, key, cold_state)
+        n_chol = (self.strategy.n_exact_chol(k, q) if status == "miss" else 0)
         errs = self._replay_fn(mesh)(entry.state, h_tr, g_tr, folds.x_folds,
                                      folds.y_folds, lams_run)
         # digest of the entry actually SERVED (≠ the requested key's under
         # a covering hit), so results are attributable to their Θ
         info = dict(status=status, digest=entry.key.digest()[:12],
-                    policy=self.reuse, **cache.stats)
+                    policy=self.reuse, **self.cache.stats)
         return errs, info, n_chol
 
     def run(self, folds: FoldData, lams: jax.Array) -> CVResult:
@@ -728,12 +1121,8 @@ class CVEngine:
         k = folds.fold_hess.shape[0]
         q = lams.shape[0]
         mesh = self._resolve_mesh(k)
+        self._check_fold_axis(mesh, k)
         if mesh is not None:
-            n_fold = mesh.shape[shardlib.CV_FOLD_AXIS]
-            if k % n_fold:
-                raise ValueError(
-                    f"{k} folds not divisible by mesh axis "
-                    f"{shardlib.CV_FOLD_AXIS}={n_fold}")
             lams_run, _ = shardlib.pad_to_multiple(
                 lams, mesh.shape[shardlib.CV_LAM_AXIS])
         else:

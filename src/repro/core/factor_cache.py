@@ -36,6 +36,16 @@ Persistence goes through :class:`~repro.checkpoint.CheckpointManager`
 (Θ and PackedFactor are already pytrees): each entry is one checkpoint step
 plus an ``index.json`` sidecar recording the key and leaf specs, so caches
 survive across processes and torn writes are skipped on load.
+
+Service-shaped deployments bound residency with ``FactorCache(max_bytes=)``
+— a byte-budget LRU over the entries' array payload (eviction counters in
+:attr:`FactorCache.stats`); an evicted entry can only miss and repopulate,
+never serve stale.  Population is stage-aligned with the engine's pipelined
+sweep: the entry is written as soon as the ``fold_state`` stage completes,
+*before* the λ stream starts, so an early-stopped sweep
+(:meth:`~repro.core.engine.CVEngine.sweep_async` with ``stop_tol=``) still
+leaves a complete, replayable entry — Θ is λ-grid independent; only the
+curve evaluation is truncated.
 """
 from __future__ import annotations
 
@@ -152,6 +162,17 @@ def make_key(h_tr, anchors, *, block: int, backend: str,
         params=tuple(sorted(params.items())))
 
 
+def _tree_nbytes(tree) -> int:
+    """Total bytes of every array leaf (aval-based — never syncs a
+    device buffer that is still being computed)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        nbytes = getattr(leaf, "nbytes", None)
+        total += int(nbytes if nbytes is not None
+                     else np.asarray(leaf).nbytes)
+    return total
+
+
 @dataclasses.dataclass
 class CacheEntry:
     """One cached fit: the batched-over-folds Θ state, and optionally the
@@ -161,6 +182,8 @@ class CacheEntry:
     state: picholesky.PiCholesky          # theta (k, r+1, P), center (k,)
     anchors: Optional[packing.PackedFactor] = None   # vec (k, g, P)
     hits: int = 0
+    nbytes: int = 0                       # array payload (state + anchors)
+    last_used: int = 0                    # LRU clock tick of last touch
 
 
 class FactorCache:
@@ -174,25 +197,51 @@ class FactorCache:
       whose anchor range covers the requested range (the cached Θ answers
       the sub-range, at the wider fit's interpolation accuracy).
 
-    Counters (``hits`` / ``misses`` / ``anchor_hits``) are cumulative over
-    the cache's lifetime; tests and the warm-vs-cold bench read them.
+    ``max_bytes`` bounds the resident array payload for service-shaped
+    deployments: every write evicts least-recently-used entries (the LRU
+    clock ticks on hits, anchor reads, and writes) until the total fits
+    the budget.  The entry being written always survives — a cache whose
+    budget is smaller than one entry degrades to capacity one, never to
+    refusing writes.  Eviction is invalidation-safe by construction: an
+    evicted digest simply misses and repopulates (all lookup indexes are
+    purged with the entry), so a stale hit is impossible.
+
+    Counters (``hits`` / ``misses`` / ``anchor_hits`` / ``evictions``) are
+    cumulative over the cache's lifetime; tests and the warm-vs-cold bench
+    read them via :attr:`stats`.
     """
 
-    def __init__(self):
+    def __init__(self, max_bytes: Optional[int] = None):
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError(f"max_bytes must be positive or None, "
+                             f"got {max_bytes}")
+        self.max_bytes = max_bytes
         self.entries: Dict[str, CacheEntry] = {}
         self._by_base: Dict[str, List[str]] = {}
         self._by_anchor: Dict[str, str] = {}
         self.hits = 0
         self.misses = 0
         self.anchor_hits = 0
+        self.evictions = 0
+        self._tick = 0
 
     def __len__(self) -> int:
         return len(self.entries)
 
     @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+    @property
     def stats(self) -> dict:
         return dict(entries=len(self.entries), hits=self.hits,
-                    misses=self.misses, anchor_hits=self.anchor_hits)
+                    misses=self.misses, anchor_hits=self.anchor_hits,
+                    evictions=self.evictions, bytes=self.total_bytes,
+                    max_bytes=self.max_bytes)
+
+    def _touch(self, entry: CacheEntry) -> None:
+        self._tick += 1
+        entry.last_used = self._tick
 
     # ---------------------------------------------------------------- read
 
@@ -220,6 +269,7 @@ class FactorCache:
             return None
         self.hits += 1
         entry.hits += 1
+        self._touch(entry)
         return entry
 
     def get_anchors(self, key: CacheKey) -> Optional[packing.PackedFactor]:
@@ -228,23 +278,53 @@ class FactorCache:
         digest = self._by_anchor.get(key.anchor_digest())
         if digest is None:
             return None
-        anchors = self.entries[digest].anchors
-        if anchors is not None:      # entry may have been repopulated bare
+        entry = self.entries[digest]
+        if entry.anchors is not None:  # entry may have been repopulated bare
             self.anchor_hits += 1
-        return anchors
+            self._touch(entry)
+        return entry.anchors
 
     # --------------------------------------------------------------- write
 
     def put(self, key: CacheKey, state: picholesky.PiCholesky,
             anchors: Optional[packing.PackedFactor] = None) -> CacheEntry:
         digest = key.digest()
-        entry = CacheEntry(key=key, state=state, anchors=anchors)
+        entry = CacheEntry(key=key, state=state, anchors=anchors,
+                           nbytes=_tree_nbytes((state, anchors)))
         if digest not in self.entries:
             self._by_base.setdefault(key.base_digest(), []).append(digest)
         self.entries[digest] = entry
         if anchors is not None:
             self._by_anchor[key.anchor_digest()] = digest
+        self._touch(entry)
+        self._evict_to_budget(keep=digest)
         return entry
+
+    # ------------------------------------------------------ byte-budget LRU
+
+    def _evict(self, digest: str) -> None:
+        """Drop one entry and purge every lookup index that could serve it
+        (exact, covering and anchor routes) — an evicted digest can only
+        MISS afterwards, never return a stale state."""
+        entry = self.entries.pop(digest)
+        base = entry.key.base_digest()
+        siblings = self._by_base.get(base)
+        if siblings is not None:
+            siblings[:] = [d for d in siblings if d != digest]
+            if not siblings:
+                del self._by_base[base]
+        anchor = entry.key.anchor_digest()
+        if self._by_anchor.get(anchor) == digest:
+            del self._by_anchor[anchor]
+        self.evictions += 1
+
+    def _evict_to_budget(self, keep: str) -> None:
+        if self.max_bytes is None:
+            return
+        while self.total_bytes > self.max_bytes and len(self.entries) > 1:
+            victim = min((d for d in self.entries if d != keep),
+                         key=lambda d: self.entries[d].last_used)
+            self._evict(victim)
 
     # --------------------------------------------------- persistence (disk)
 
@@ -300,12 +380,15 @@ class FactorCache:
         return path
 
     @classmethod
-    def load(cls, directory: str) -> "FactorCache":
+    def load(cls, directory: str,
+             max_bytes: Optional[int] = None) -> "FactorCache":
         """Rebuild a cache from :meth:`save` output.  Entries whose
         checkpoint fails the manager's hash verification (torn writes) are
         skipped, never half-loaded; a stale digest (index/payload mismatch)
-        is likewise dropped."""
-        cache = cls()
+        is likewise dropped.  ``max_bytes`` applies the byte-budget LRU to
+        the reloaded cache (entries beyond the budget are evicted in index
+        order — oldest first — during the load)."""
+        cache = cls(max_bytes=max_bytes)
         path = os.path.join(directory, INDEX_FILENAME)
         if not os.path.exists(path):
             return cache

@@ -19,7 +19,8 @@ from repro.models.params import Spec
 
 __all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
            "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
-           "pad_to_multiple", "chunk_lams", "cv_state_specs"]
+           "pad_to_multiple", "chunk_lams", "cv_state_specs",
+           "cv_chunk_in_specs", "StageRing"]
 
 
 def spec_pspec(spec: Spec, ctx) -> P:
@@ -100,6 +101,55 @@ def cv_state_specs(state: Any) -> Any:
     fitted from — cache shards follow the folds × lams mesh.
     """
     return jax.tree.map(lambda _: P(CV_FOLD_AXIS), state)
+
+
+def cv_chunk_in_specs(state: Any, aux: Any) -> tuple:
+    """Per-stage ``in_specs`` for the pipelined sweep's λ-chunk stage.
+
+    The staged (async) sweep evaluates one λ chunk per dispatch:
+    ``chunk_errors(state, f_idx, h_tr, g_tr, x_folds, y_folds, lams_c, aux)``.
+    Everything per-fold — the cached/stacked state pytree and the fold
+    statistics — shards over :data:`CV_FOLD_AXIS` (leading axis), the λ
+    chunk over :data:`CV_LAM_AXIS`, and the replicated ``aux`` from
+    ``prepare`` rides along unsharded.  One definition shared by the
+    warm-replay chunk stage and the cold pipelined stage, so the two paths
+    cannot drift onto different meshes.
+    """
+    fold = P(CV_FOLD_AXIS)
+    return (cv_state_specs(state), fold, fold, fold, fold, fold,
+            P(CV_LAM_AXIS), jax.tree.map(lambda _: P(), aux))
+
+
+class StageRing:
+    """Bounded-lookahead dispatch ring (double buffering at ``depth=2``).
+
+    The pipelined sweep dispatches per-fold ``fold_state`` stages without
+    blocking; each dispatch consumes a donated per-fold Hessian slice, so
+    unbounded lookahead would hold every fold's donated input in flight at
+    once.  ``admit`` blocks on the *oldest* outstanding stage output before
+    accepting a new dispatch, keeping at most ``depth`` stages (and their
+    donated buffers) live — fold f+1's factorizations overlap fold f's
+    chunk streaming, fold f+2's wait their turn.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._live: list = []
+
+    def admit(self, staged: Any) -> Any:
+        """Register a freshly dispatched stage output, blocking on the
+        oldest outstanding one if the ring is full.  Returns ``staged``."""
+        if len(self._live) >= self.depth:
+            jax.block_until_ready(self._live.pop(0))
+        self._live.append(staged)
+        return staged
+
+    def drain(self) -> None:
+        """Block on everything still in flight (end of the stage stream)."""
+        while self._live:
+            jax.block_until_ready(self._live.pop(0))
 
 
 def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0):

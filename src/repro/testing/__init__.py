@@ -1,1 +1,3 @@
-"""Test-support utilities (hypothesis fallback, shared helpers)."""
+"""Test-support utilities: the deterministic hypothesis fallback shim
+(:mod:`repro.testing.hypothesis_fallback`) and the shared property-test
+generators (:mod:`repro.testing.strategies`)."""

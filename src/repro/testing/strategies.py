@@ -1,0 +1,126 @@
+"""Shared property-test generators for the CV/factor-pipeline suites.
+
+One definition of the SPD-Hessian / fold-problem / λ-grid / backend
+generators that used to be copy-pasted across ``tests/test_factor_cache.py``,
+``tests/test_packed_pipeline.py`` and ``tests/test_engine.py``.  Two layers:
+
+* plain **builders** (:func:`spd_matrix`, :func:`regression_folds`,
+  :func:`make_backend`, :func:`log_grid`) — deterministic constructors any
+  test can call directly, hypothesis or not;
+* **strategies** (:func:`backend_names`, :func:`grid_sizes`,
+  :func:`lam_chunks`, :func:`packed_shapes`, …) — ``@given``-able wrappers
+  that deliberately cover the awkward corners: grid sizes that are not a
+  multiple of the λ chunk (``q % chunk != 0``), grids smaller than the
+  anchor count (``q < g``), chunk sizes larger than the grid, and matrix
+  sizes that are not a tile multiple (including ``h < block``).
+
+Works with both real hypothesis and the deterministic in-repo fallback
+(:mod:`repro.testing.hypothesis_fallback`): only the shared strategy
+surface is used (``integers`` / ``sampled_from`` / ``floats`` /
+``booleans`` / ``just`` / ``.map``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+try:  # pragma: no cover - exercised implicitly by both environments
+    from hypothesis import strategies as st
+except ImportError:  # hermetic container: install the fallback shim
+    from . import hypothesis_fallback
+
+    hypothesis_fallback.install()
+    from hypothesis import strategies as st
+
+__all__ = [
+    "spd_matrix", "regression_folds", "make_backend", "log_grid",
+    "backend_names", "grid_sizes", "lam_chunks", "heights", "blocks",
+    "packed_shapes", "DEFAULT_GRID_RANGE", "PACKED_SHAPES",
+]
+
+#: (h, block) pairs where h is NOT a tile multiple, incl. h < block — the
+#: escape-hatch oracle cases (also available as the :func:`packed_shapes`
+#: strategy; the list form feeds ``pytest.mark.parametrize``).
+PACKED_SHAPES = [(5, 8), (13, 8), (21, 8), (37, 8), (27, 16), (61, 16)]
+
+#: (log10 lo, log10 hi) of the canonical test λ grid — the same decades the
+#: suites' fixed ``LAMS = logspace(-3, 2, 31)`` grid spans, so grids drawn
+#: from :func:`grid_sizes` derive the same anchors and can hit the cache.
+DEFAULT_GRID_RANGE = (-3.0, 2.0)
+
+
+# ---------------------------------------------------------------- builders
+
+
+def spd_matrix(h: int, seed: int = 0, dtype=jnp.float64) -> jax.Array:
+    """Well-conditioned (h, h) SPD test Hessian: XᵀX + h·I."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2 * h, h), dtype)
+    return x.T @ x + h * jnp.eye(h, dtype=dtype)
+
+
+def regression_folds(h: int = 32, n: int = 256, k: int = 4, seed: int = 1,
+                     dtype=jnp.float64, jitter: float = 0.0):
+    """k-fold :class:`~repro.core.folds.FoldData` over a synthetic ridge
+    problem — the shared fold-problem builder (``jitter`` perturbs the
+    design, for invalidation tests that need a *different* Hessian)."""
+    from repro.core.folds import make_folds
+    from repro.data import make_regression_dataset
+
+    x, y = make_regression_dataset(jax.random.PRNGKey(seed), n, h,
+                                   dtype=jnp.float64)
+    if jitter:
+        x = x + jitter * jax.random.normal(jax.random.PRNGKey(99), x.shape,
+                                           jnp.float64)
+    return make_folds(x.astype(dtype), y.astype(dtype), k)
+
+
+def make_backend(name: str, block: int = 8):
+    """Backend under test: ``'reference'`` or ``'pallas'`` (interpret mode
+    off-TPU) with proportionate kernel tiles for small test problems."""
+    from repro.core.backends import PallasBackend, ReferenceBackend
+
+    return (ReferenceBackend() if name == "reference"
+            else PallasBackend(chol_block=block, trsm_block=block))
+
+
+def log_grid(q: int, lo: float = DEFAULT_GRID_RANGE[0],
+             hi: float = DEFAULT_GRID_RANGE[1]) -> jax.Array:
+    """q-point log-spaced λ grid over the canonical test decades."""
+    return jnp.logspace(lo, hi, q)
+
+
+# -------------------------------------------------------------- strategies
+
+
+def backend_names():
+    """Both linalg backends — every parity property runs on each."""
+    return st.sampled_from(["reference", "pallas"])
+
+
+def grid_sizes(lo: int = 2, hi: int = 64):
+    """Dense-grid sizes q: the default floor of 2 keeps ``q < g`` (fewer
+    grid points than anchors) in play, the ceiling crosses every chunk
+    boundary in :func:`lam_chunks`."""
+    return st.integers(lo, hi)
+
+
+def lam_chunks():
+    """λ-chunk settings: unchunked (None), degenerate (1), sizes that do
+    not divide typical grids (5, 7), and chunk > q (64)."""
+    return st.sampled_from([None, 1, 5, 7, 16, 64])
+
+
+def heights(lo: int = 4, hi: int = 48):
+    """Matrix sizes h, deliberately spanning non-tile-multiples."""
+    return st.integers(lo, hi)
+
+
+def blocks():
+    """Packed-layout tile sizes."""
+    return st.sampled_from([4, 8, 16])
+
+
+def packed_shapes():
+    """(h, block) pairs where h is NOT a tile multiple, incl. h < block —
+    the escape-hatch oracle cases."""
+    return st.sampled_from(PACKED_SHAPES)

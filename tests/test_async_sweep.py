@@ -1,0 +1,367 @@
+"""Pipelined async λ-sweep: staged parity, early stopping, cache composition.
+
+The tentpole contracts live here:
+
+* **pipelined ≡ serial bit-for-bit** — ``sweep_async(pipelined=True)`` and
+  ``pipelined=False`` run the *same* jitted stage functions in different
+  dispatch orders, so their error curves must be identical to the last bit,
+  on both backends, cold and warm-replay, chunked and unchunked;
+* **early-stop correctness** — ``stop_tol=0`` terminates the stream only on
+  strict non-improvement, so on the suite's (unimodal) hold-out curves the
+  returned minimum is exactly the full curve's argmin;
+* **cache composition** — a warm hit streams with zero factorizations, and
+  an early-stopped cold sweep still populates a *complete* entry (the state
+  stage finishes and writes before the λ stream starts).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, factor_cache
+from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.distributed import sharding as shardlib
+from repro.testing import strategies as props
+
+
+@pytest.fixture(scope="module")
+def folds():
+    return props.regression_folds(h=32, n=256, k=4)
+
+
+LAMS = props.log_grid(31)
+#: grid whose hold-out minimum sits mid-grid (the (-3, 2) decades put it at
+#: the edge for this problem) — the early-stop cases need a curve that
+#: bottoms out with chunks left to skip
+WIDE = props.log_grid(48, -3, 6)
+
+
+def _strat(**kw):
+    kw.setdefault("g", 4)
+    kw.setdefault("block", 8)
+    return engine.PiCholeskyStrategy(**kw)
+
+
+def _chunk_curves(parts):
+    return (np.concatenate([p.errors for p in parts]),
+            np.concatenate([p.lams for p in parts]))
+
+
+# --------------------------------------------- pipelined ≡ serial (bitwise)
+
+
+@pytest.mark.tier2
+@given(backend=props.backend_names(), q=props.grid_sizes(2, 48),
+       chunk=props.lam_chunks(), warm=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_pipelined_equals_serial_bitwise(backend, q, chunk, warm):
+    """Property: for any grid density (incl. q % chunk ≠ 0, q < g and
+    chunk > q), on both backends, cold and warm-replay, the pipelined
+    dispatch order reproduces the serial one bit-for-bit."""
+    folds = props.regression_folds(h=24)
+    bk = props.make_backend(backend)
+    grid = props.log_grid(q)
+    cache = warm_cache = None
+    if warm:
+        cache = factor_cache.FactorCache()
+        engine.CVEngine(_strat(), backend=bk, cache=cache,
+                        lam_chunk=chunk).run(folds, grid)   # populate
+        warm_cache = cache
+    pipe = engine.CVEngine(_strat(), backend=bk, cache=warm_cache,
+                           lam_chunk=chunk)
+    ser = engine.CVEngine(_strat(), backend=bk, cache=warm_cache,
+                          lam_chunk=chunk)
+    parts_p = list(pipe.sweep_async(folds, grid))
+    parts_s = list(ser.sweep_async(folds, grid, pipelined=False))
+    assert len(parts_p) == len(parts_s)
+    for cp, cs in zip(parts_p, parts_s):
+        np.testing.assert_array_equal(cp.fold_errors, cs.fold_errors)
+        assert (cp.index, cp.start, cp.best_lam) == \
+            (cs.index, cs.start, cs.best_lam)
+    if warm:
+        assert parts_p[-1].cache["status"] == "hit"
+        assert parts_p[-1].n_exact_chol == 0
+
+
+def test_pipelined_equals_serial_smoke(folds):
+    """Tier-1 pin of the bitwise contract (one cold + one warm case)."""
+    cache = factor_cache.FactorCache()
+    for _ in range(2):   # pass 1 cold (populates), pass 2 warm (hits)
+        r_pipe = engine.CVEngine(_strat(), cache=cache, lam_chunk=7
+                                 ).run_async(folds, LAMS)
+        r_ser = engine.CVEngine(_strat(), cache=cache, lam_chunk=7
+                                ).run_async(folds, LAMS, pipelined=False)
+        np.testing.assert_array_equal(r_pipe.errors, r_ser.errors)
+        assert r_pipe.best_lam == r_ser.best_lam
+    assert r_pipe.extras["engine"]["cache"]["status"] == "hit"
+
+
+def test_run_async_matches_fused_run(folds):
+    """The staged sweep computes the same curve as the one-jit fused sweep
+    (different XLA fusion ⇒ tolerance, not bitwise)."""
+    for chunk in (None, 7):
+        r_async = engine.CVEngine(_strat(), lam_chunk=chunk
+                                  ).run_async(folds, LAMS)
+        r_fused = engine.CVEngine(_strat(), lam_chunk=chunk).run(folds, LAMS)
+        np.testing.assert_allclose(r_async.errors, r_fused.errors,
+                                   rtol=1e-9, atol=1e-12)
+        assert r_async.best_lam == pytest.approx(r_fused.best_lam, rel=1e-9)
+        assert r_async.n_exact_chol == r_fused.n_exact_chol
+
+
+@pytest.mark.parametrize("name,params", [
+    ("exact", {}),
+    ("picholesky_warmstart", dict(block=8, g_rest=3)),
+    ("svd", dict(mode="truncated", k_trunc=16)),
+    ("pinrmse", {}),
+])
+def test_staged_sweep_is_strategy_agnostic(folds, name, params):
+    """Every built-in strategy runs through the staged fold_state /
+    fold_errors seam — pipelined ≡ serial bitwise, both ≈ the fused sweep."""
+    mk = lambda: engine.make_strategy(name, **params)  # noqa: E731
+    r_pipe = engine.CVEngine(mk(), lam_chunk=7).run_async(folds, LAMS)
+    r_ser = engine.CVEngine(mk(), lam_chunk=7).run_async(folds, LAMS,
+                                                         pipelined=False)
+    np.testing.assert_array_equal(r_pipe.errors, r_ser.errors)
+    r_fused = engine.CVEngine(mk(), lam_chunk=7).run(folds, LAMS)
+    np.testing.assert_allclose(r_pipe.errors, r_fused.errors, rtol=1e-9)
+
+
+def test_sweep_async_yields_incremental_chunks(folds):
+    """The stream is genuinely incremental: chunk boundaries tile the grid,
+    per-chunk curves concatenate to the full curve, and the running best
+    is monotonically non-increasing."""
+    parts = list(engine.CVEngine(_strat(), lam_chunk=7
+                                 ).sweep_async(folds, LAMS))
+    assert [p.index for p in parts] == list(range(5))   # ceil(31 / 7)
+    assert [p.start for p in parts] == [0, 7, 14, 21, 28]
+    assert [p.lams.size for p in parts] == [7, 7, 7, 7, 3]  # 31 % 7 == 3
+    errors, lams = _chunk_curves(parts)
+    np.testing.assert_array_equal(lams, np.asarray(LAMS))
+    full = engine.CVEngine(_strat(), lam_chunk=7).run_async(folds, LAMS)
+    np.testing.assert_array_equal(errors, full.errors)
+    bests = [p.best_error for p in parts]
+    assert all(b2 <= b1 for b1, b2 in zip(bests, bests[1:]))
+    assert parts[-1].best_error == errors.min()
+
+
+# ----------------------------------------------------- early-stop λ-search
+
+
+@pytest.mark.tier2
+@given(q=props.grid_sizes(8, 64), chunk=st.sampled_from([3, 4, 7, 16]),
+       backend=props.backend_names())
+@settings(max_examples=8, deadline=None)
+def test_early_stop_tol0_returns_full_argmin(q, chunk, backend):
+    """Property: stop_tol=0 stops only on strict non-improvement, so for
+    any grid density / chunking / backend the early-stopped search returns
+    exactly the argmin of the full curve."""
+    folds = props.regression_folds(h=24)
+    bk = props.make_backend(backend)
+    grid = props.log_grid(q, -3, 6)
+    full = engine.CVEngine(_strat(), backend=bk, lam_chunk=chunk
+                           ).run_async(folds, grid)
+    es = engine.CVEngine(_strat(), backend=bk, lam_chunk=chunk
+                         ).run_async(folds, grid, stop_tol=0.0)
+    assert es.best_lam == full.best_lam
+    assert es.best_error == full.best_error
+    # the evaluated prefix is bitwise the full curve's prefix
+    np.testing.assert_array_equal(es.errors,
+                                  full.errors[:es.errors.size])
+
+
+def test_early_stop_skips_tail_chunks(folds):
+    """On a curve that bottoms out mid-grid the stream stops early, the
+    result records how far it ran, and (for the exact strategy) the skipped
+    chunks are factorizations never performed."""
+    es = engine.CVEngine(_strat(), lam_chunk=4).run_async(folds, WIDE,
+                                                          stop_tol=0.0)
+    info = es.extras["engine"]["async"]
+    assert info["stopped"] and info["chunks_evaluated"] < info["chunks_total"]
+    assert es.errors.size == info["lams_evaluated"] < WIDE.size
+    full = engine.CVEngine(_strat(), lam_chunk=4).run_async(folds, WIDE)
+    assert es.best_lam == full.best_lam
+
+    r_exact = engine.CVEngine("exact", lam_chunk=4).run_async(
+        folds, WIDE, stop_tol=0.0)
+    assert r_exact.n_exact_chol < 4 * WIDE.size
+    assert r_exact.n_exact_chol == \
+        4 * r_exact.extras["engine"]["async"]["lams_evaluated"]
+
+
+def test_early_stop_patience_and_tol_semantics(folds):
+    """Higher patience streams at least as far; a huge stop_tol (nothing
+    counts as improvement) stops after exactly `patience` chunks."""
+    runs = {p: engine.CVEngine(_strat(), lam_chunk=4).run_async(
+        folds, WIDE, stop_tol=0.0, stop_patience=p) for p in (1, 2, 4)}
+    evaluated = {p: r.extras["engine"]["async"]["chunks_evaluated"]
+                 for p, r in runs.items()}
+    assert evaluated[1] <= evaluated[2] <= evaluated[4]
+
+    greedy = engine.CVEngine(_strat(), lam_chunk=4).run_async(
+        folds, WIDE, stop_tol=1e9, stop_patience=3)
+    assert greedy.extras["engine"]["async"]["chunks_evaluated"] == 4  # 1 + 3
+
+
+def test_early_stop_validation_and_degenerate_cases(folds):
+    with pytest.raises(ValueError, match="stop_tol"):
+        next(engine.CVEngine(_strat()).sweep_async(folds, LAMS,
+                                                   stop_tol=-0.1))
+    with pytest.raises(ValueError, match="stop_patience"):
+        next(engine.CVEngine(_strat()).sweep_async(folds, LAMS, stop_tol=0.0,
+                                                   stop_patience=0))
+    # unchunked: a single chunk can never stop early
+    r = engine.CVEngine(_strat(), lam_chunk=None).run_async(folds, LAMS,
+                                                            stop_tol=0.0)
+    info = r.extras["engine"]["async"]
+    assert info["chunks_total"] == 1 and not info["stopped"]
+    np.testing.assert_allclose(
+        r.errors, engine.CVEngine(_strat()).run(folds, LAMS).errors,
+        rtol=1e-9)
+
+
+# ------------------------------------------------------- cache composition
+
+
+def test_early_stopped_cold_sweep_populates_complete_entry(folds):
+    """Partial-population contract: the cache entry is written when the
+    state stage completes, before the λ stream — an early-stopped cold
+    sweep leaves a complete Θ that a later FULL sweep replays with zero
+    factorizations, matching an uncached full sweep."""
+    cache = factor_cache.FactorCache()
+    es = engine.CVEngine(_strat(), cache=cache, lam_chunk=4).run_async(
+        folds, WIDE, stop_tol=0.0)
+    assert es.extras["engine"]["async"]["stopped"]
+    assert es.extras["engine"]["cache"]["status"] == "miss"
+    assert len(cache) == 1
+
+    bk = CountingBackend(ReferenceBackend())
+    warm = engine.CVEngine(_strat(), backend=bk, cache=cache, lam_chunk=4)
+    r_warm = warm.run_async(folds, WIDE)
+    assert bk.n_cholesky == 0
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+    assert r_warm.errors.size == WIDE.size
+    base = engine.CVEngine(_strat(), lam_chunk=4).run_async(folds, WIDE,
+                                                            pipelined=False)
+    np.testing.assert_allclose(r_warm.errors, base.errors,
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_warm_async_replay_zero_factorizations(folds):
+    """A run()-populated cache serves the async stream: zero cholesky
+    traces, hit reported on every yielded chunk."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    bk = CountingBackend(ReferenceBackend())
+    eng = engine.CVEngine(_strat(), backend=bk, cache=cache, lam_chunk=5)
+    parts = list(eng.sweep_async(folds, LAMS))
+    assert bk.n_cholesky == 0
+    assert all(p.cache["status"] == "hit" for p in parts)
+    assert all(p.n_exact_chol == 0 for p in parts)
+    assert bk.stage_count("fold_errors", "interp_solve") > 0
+
+
+def test_async_cache_bypass_for_uncacheable(folds):
+    """exact (no cache_meta) and chol_fn overrides bypass, like run()."""
+    cache = factor_cache.FactorCache()
+    r = engine.CVEngine("exact", cache=cache).run_async(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] == "bypass"
+    assert len(cache) == 0
+    r2 = engine.CVEngine(_strat(chol_fn=jnp.linalg.cholesky), cache=cache
+                         ).run_async(folds, LAMS)
+    assert r2.extras["engine"]["cache"]["status"] == "bypass"
+    assert len(cache) == 0
+
+
+# ------------------------------------------------- stage-granular counting
+
+
+def test_stage_counters_attribute_ops_to_stages(folds):
+    """Cold piCholesky: factorizations trace under 'fold_state', only
+    fused interpolant solves under 'fold_errors'.  Exact: factorizations
+    trace under 'fold_errors' (that is where its work lives)."""
+    bk = CountingBackend(ReferenceBackend())
+    engine.CVEngine(_strat(), backend=bk, lam_chunk=7).run_async(folds, LAMS)
+    assert bk.stage_count("fold_state", "cholesky") > 0
+    assert bk.stage_count("fold_errors", "cholesky") == 0
+    assert bk.stage_count("fold_errors", "interp_solve") > 0
+    assert bk.n_cholesky == sum(rec.get("cholesky", 0)
+                                for rec in bk.by_stage.values())
+
+    bk2 = CountingBackend(ReferenceBackend())
+    engine.CVEngine("exact", backend=bk2, lam_chunk=7).run_async(folds, LAMS)
+    assert bk2.stage_count("fold_errors", "cholesky") > 0
+    assert bk2.stage_count("fold_state", "cholesky") == 0
+    bk2.reset()
+    assert bk2.n_cholesky == 0 and bk2.by_stage == {}
+
+
+def test_warmstart_prepare_counts_under_prepare_stage(folds):
+    """picholesky_warmstart factorizes its anchor fit in prepare and its
+    per-fold refresh in fold_state — both attributed."""
+    bk = CountingBackend(ReferenceBackend())
+    strat = engine.PiCholeskyWarmstart(block=8, g_rest=3)
+    engine.CVEngine(strat, backend=bk, lam_chunk=7).run_async(folds, LAMS)
+    assert bk.stage_count("prepare", "cholesky") > 0
+    assert bk.stage_count("fold_state", "cholesky") > 0
+
+
+# --------------------------------------------------------- mesh composition
+
+
+@pytest.mark.tier2
+def test_async_sweep_on_mesh_matches_unsharded(folds):
+    """The staged sweep composes with the folds × lams mesh (conftest
+    forces 4 host devices): chunk λs pad to the λ axis, state shards over
+    folds, pipelined ≡ serial bitwise, and the curve matches unsharded."""
+    pipe = engine.CVEngine(_strat(), mesh="auto", lam_chunk=3)
+    r_pipe = pipe.run_async(folds, LAMS)
+    assert r_pipe.extras["engine"]["mesh"] is not None
+    r_ser = engine.CVEngine(_strat(), mesh="auto", lam_chunk=3).run_async(
+        folds, LAMS, pipelined=False)
+    np.testing.assert_array_equal(r_pipe.errors, r_ser.errors)
+    base = engine.CVEngine(_strat()).run(folds, LAMS)
+    np.testing.assert_allclose(r_pipe.errors, base.errors, rtol=1e-8)
+
+    # 2×2 mesh: the λ chunk (3) pads to the λ-axis multiple (4) and the
+    # padded tail is stripped before the chunk is yielded
+    mesh22 = shardlib.make_cv_mesh(2)
+    r22 = engine.CVEngine(_strat(), mesh=mesh22, lam_chunk=3
+                          ).run_async(folds, LAMS)
+    assert r22.errors.shape == (31,)
+    np.testing.assert_allclose(r22.errors, base.errors, rtol=1e-8)
+
+    # early stop under shard_map: same semantics, stops the global stream
+    es = engine.CVEngine(_strat(), mesh="auto", lam_chunk=4).run_async(
+        folds, WIDE, stop_tol=0.0)
+    full = engine.CVEngine(_strat(), mesh="auto", lam_chunk=4).run_async(
+        folds, WIDE)
+    assert es.best_lam == full.best_lam
+    assert es.extras["engine"]["async"]["stopped"]
+
+
+def test_async_indivisible_fold_axis_raises():
+    """Mesh misconfiguration fails with the engine's ValueError (same as
+    run()), not a shard_map internal error."""
+    folds5 = props.regression_folds(h=32, n=320, k=5)
+    mesh = shardlib.make_cv_mesh(2)     # fold axis 2, but k=5
+    eng = engine.CVEngine(_strat(), mesh=mesh)
+    with pytest.raises(ValueError, match="not divisible"):
+        next(eng.sweep_async(folds5, LAMS))
+    with pytest.raises(ValueError, match="not divisible"):
+        eng.run_async(folds5, LAMS)
+
+
+@pytest.mark.tier2
+def test_async_warm_replay_on_mesh(folds):
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), mesh="auto", cache=cache, lam_chunk=3
+                    ).run_async(folds, LAMS)
+    bk = CountingBackend(ReferenceBackend())
+    warm = engine.CVEngine(_strat(), backend=bk, mesh="auto", cache=cache,
+                           lam_chunk=3)
+    r = warm.run_async(folds, LAMS)
+    assert bk.n_cholesky == 0
+    assert r.extras["engine"]["cache"]["status"] == "hit"
+    base = engine.CVEngine(_strat()).run(folds, LAMS)
+    np.testing.assert_allclose(r.errors, base.errors, rtol=1e-8)

@@ -7,31 +7,23 @@ import numpy as np
 import pytest
 
 from repro.core import cv, cv_host, engine
-from repro.core.folds import make_folds
-from repro.data import make_regression_dataset
 from repro.distributed import sharding as shardlib
+from repro.testing import strategies as props
+
+# fold problems come from the shared generators (repro.testing.strategies)
 
 
 @pytest.fixture(scope="module")
-def problem():
-    x, y = make_regression_dataset(jax.random.PRNGKey(1), 400, 128,
-                                   dtype=jnp.float64)
-    return x, y
+def folds5():
+    return props.regression_folds(h=128, n=400, k=5)
 
 
 @pytest.fixture(scope="module")
-def folds5(problem):
-    x, y = problem
-    return make_folds(x, y, 5)
+def folds4():
+    return props.regression_folds(h=128, n=400, k=4)
 
 
-@pytest.fixture(scope="module")
-def folds4(problem):
-    x, y = problem
-    return make_folds(x, y, 4)
-
-
-LAMS = jnp.logspace(-3, 2, 31)
+LAMS = props.log_grid(31)
 
 
 def _assert_result_close(a, b, rtol=1e-4):

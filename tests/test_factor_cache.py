@@ -9,31 +9,19 @@ silent stale hit), and the miss must repopulate correctly.
 """
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, factor_cache, packing, picholesky
-from repro.core.backends import (CountingBackend, PallasBackend,
-                                 ReferenceBackend)
-from repro.core.folds import make_folds
-from repro.data import make_regression_dataset
+from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.testing import strategies as props
 
-
-def _backend(name):
-    return (ReferenceBackend() if name == "reference"
-            else PallasBackend(chol_block=8, trsm_block=8))
-
-
-def _folds(h=32, n=256, k=4, seed=1, dtype=jnp.float64, jitter=0.0):
-    x, y = make_regression_dataset(jax.random.PRNGKey(seed), n, h,
-                                   dtype=jnp.float64)
-    if jitter:
-        x = x + jitter * jax.random.normal(jax.random.PRNGKey(99), x.shape,
-                                           jnp.float64)
-    return make_folds(x.astype(dtype), y.astype(dtype), k)
+# shared generators (repro.testing.strategies) — one definition of the
+# backend/fold-problem builders across the property suites
+_backend = props.make_backend
+_folds = props.regression_folds
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +29,7 @@ def folds():
     return _folds()
 
 
-LAMS = jnp.logspace(-3, 2, 31)
+LAMS = props.log_grid(31)
 
 
 def _strat(**kw):
@@ -100,8 +88,8 @@ def test_cache_off_and_uncacheable_bypass(folds):
 # ------------------------------------------------- warm == cold property
 
 
-@given(backend=st.sampled_from(["reference", "pallas"]),
-       q=st.integers(2, 64), chunk=st.sampled_from([None, 1, 5, 7, 64]))
+@given(backend=props.backend_names(), q=props.grid_sizes(2, 64),
+       chunk=props.lam_chunks())
 @settings(max_examples=10, deadline=None)
 def test_warm_replay_matches_cold_sweep(backend, q, chunk):
     """Property: for ANY grid over the cached anchor range — denser or
@@ -114,7 +102,7 @@ def test_warm_replay_matches_cold_sweep(backend, q, chunk):
     engine.CVEngine(_strat(), backend=bk, cache=cache,
                     lam_chunk=chunk).run(folds, LAMS)   # populate
 
-    grid = jnp.logspace(-3, 2, q)         # same range ⇒ same derived anchors
+    grid = props.log_grid(q)              # same range ⇒ same derived anchors
     warm_bk = CountingBackend(bk)
     warm = engine.CVEngine(_strat(), backend=warm_bk, cache=cache,
                            lam_chunk=chunk)
@@ -326,6 +314,146 @@ def test_anchor_refit_skips_factorization(folds):
     assert len(cache) == 2                  # refit result cached too
     r2 = engine.CVEngine(_strat(degree=3), cache=cache).run(folds, LAMS)
     assert r2.extras["engine"]["cache"]["status"] == "hit"
+
+
+# ------------------------------------------------------- byte-budget LRU
+
+
+def _one_entry_bytes(folds, **kw):
+    """Array payload of a single cached entry for this problem size."""
+    probe = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=probe, **kw).run(folds, LAMS)
+    return probe.total_bytes
+
+
+def test_byte_budget_lru_evicts_oldest(folds):
+    """Three same-size entries against a two-entry budget: the oldest is
+    evicted, counters and stats() report it, and the evicted configuration
+    MISSES and repopulates — identical to a fresh cold run, never stale."""
+    one = _one_entry_bytes(folds)
+    cache = factor_cache.FactorCache(max_bytes=2 * one + one // 2)
+    for g in (4, 5, 6):     # Θ is (degree+1, P): same payload per entry
+        engine.CVEngine(_strat(g=g), cache=cache).run(folds, LAMS)
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.total_bytes <= cache.max_bytes
+    assert cache.stats["evictions"] == 1
+    assert cache.stats["bytes"] == cache.total_bytes
+    assert cache.stats["max_bytes"] == cache.max_bytes
+
+    r = engine.CVEngine(_strat(g=4), cache=cache).run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] == "miss"
+    fresh = engine.CVEngine(_strat(g=4)).run(folds, LAMS)
+    np.testing.assert_allclose(r.errors, fresh.errors, rtol=1e-7, atol=1e-9)
+    assert cache.evictions == 2          # repopulation displaced the next LRU
+
+
+def test_lru_clock_respects_hits(folds):
+    """A hit refreshes an entry's recency: the un-hit sibling is the one
+    displaced by the next insert."""
+    one = _one_entry_bytes(folds)
+    cache = factor_cache.FactorCache(max_bytes=2 * one + one // 2)
+    engine.CVEngine(_strat(g=4), cache=cache).run(folds, LAMS)   # A
+    engine.CVEngine(_strat(g=5), cache=cache).run(folds, LAMS)   # B
+    engine.CVEngine(_strat(g=4), cache=cache).run(folds, LAMS)   # hit A
+    engine.CVEngine(_strat(g=6), cache=cache).run(folds, LAMS)   # C evicts B
+    assert engine.CVEngine(_strat(g=4), cache=cache).run(
+        folds, LAMS).extras["engine"]["cache"]["status"] == "hit"
+    assert engine.CVEngine(_strat(g=5), cache=cache).run(
+        folds, LAMS).extras["engine"]["cache"]["status"] == "miss"
+
+
+def test_budget_smaller_than_one_entry_keeps_newest(folds):
+    """The entry being written always survives (capacity degrades to one,
+    writes are never refused); max_bytes=0 is rejected."""
+    cache = factor_cache.FactorCache(max_bytes=1)
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    assert len(cache) == 1
+    engine.CVEngine(_strat(g=5), cache=cache).run(folds, LAMS)
+    assert len(cache) == 1 and cache.evictions == 1
+    assert engine.CVEngine(_strat(g=5), cache=cache).run(
+        folds, LAMS).extras["engine"]["cache"]["status"] == "hit"
+    with pytest.raises(ValueError, match="max_bytes"):
+        factor_cache.FactorCache(max_bytes=0)
+
+
+def test_eviction_purges_anchor_index(folds):
+    """Evicting an entry drops its cached anchor factors too: a later
+    degree change over the same anchors must run cold ('miss'), not refit
+    from a purged PackedFactor ('refit')."""
+    one = _one_entry_bytes(folds, cache_anchors=True)
+    cache = factor_cache.FactorCache(max_bytes=one + one // 2)
+    eng = engine.CVEngine(_strat(degree=2), cache=cache, cache_anchors=True)
+    eng.run(folds, LAMS)
+    # a different problem displaces the entry (and its anchors)
+    engine.CVEngine(_strat(degree=2), cache=cache, cache_anchors=True
+                    ).run(_folds(jitter=1e-2), LAMS)
+    assert cache.evictions == 1 and len(cache) == 1
+    r = engine.CVEngine(_strat(degree=3), cache=cache, cache_anchors=True
+                        ).run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] == "miss"
+    fresh = engine.CVEngine(_strat(degree=3)).run(folds, LAMS)
+    np.testing.assert_allclose(r.errors, fresh.errors, rtol=1e-7, atol=1e-9)
+
+
+def test_eviction_purges_covering_index(folds):
+    """The 'covering' route cannot resolve to an evicted digest: a
+    sub-range only the evicted wide entry covered misses cleanly, while a
+    sub-range the surviving entry covers still hits."""
+    one = _one_entry_bytes(folds)
+    cache = factor_cache.FactorCache(max_bytes=one + one // 2)
+    engine.CVEngine(_strat(), cache=cache).run(folds, jnp.logspace(-5, 4, 31))
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)   # evicts wide
+    assert cache.evictions == 1
+    r_wide_sub = engine.CVEngine(_strat(), cache=cache, reuse="covering"
+                                 ).run(folds, jnp.logspace(-4.5, 3, 11))
+    assert r_wide_sub.extras["engine"]["cache"]["status"] == "miss"
+    r_narrow_sub = engine.CVEngine(_strat(), cache=cache, reuse="covering"
+                                   ).run(folds, jnp.logspace(-2, 1, 11))
+    assert r_narrow_sub.extras["engine"]["cache"]["status"] == "hit"
+
+
+@pytest.mark.tier2
+@given(n_keep=st.integers(1, 3), backend=props.backend_names())
+@settings(max_examples=6, deadline=None)
+def test_eviction_never_serves_stale(n_keep, backend):
+    """Property: under any budget, after any eviction/repopulation history,
+    every configuration's result equals its fresh cold run — an evicted
+    digest can only miss, never alias another entry."""
+    folds = _folds(h=24)
+    bk = _backend(backend)
+    probe = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), backend=bk, cache=probe).run(folds, LAMS)
+    one = probe.total_bytes
+    cache = factor_cache.FactorCache(max_bytes=n_keep * one + one // 2)
+    gs = [4, 5, 6, 7]
+    for g in gs:
+        engine.CVEngine(_strat(g=g), backend=bk, cache=cache
+                        ).run(folds, LAMS)
+    assert len(cache) == n_keep
+    assert cache.evictions == len(gs) - n_keep
+    for g in gs:
+        r = engine.CVEngine(_strat(g=g), backend=bk, cache=cache
+                            ).run(folds, LAMS)
+        fresh = engine.CVEngine(_strat(g=g), backend=bk).run(folds, LAMS)
+        np.testing.assert_allclose(r.errors, fresh.errors,
+                                   rtol=1e-7, atol=1e-9)
+
+
+def test_budgeted_load_applies_lru(folds, tmp_path):
+    """Reloading a persisted cache under a budget keeps only what fits,
+    and the survivors still replay bit-for-bit."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(g=4), cache=cache).run(folds, LAMS)
+    engine.CVEngine(_strat(g=5), cache=cache).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    one = cache.total_bytes // 2
+    loaded = factor_cache.FactorCache.load(str(tmp_path),
+                                           max_bytes=one + one // 2)
+    assert len(loaded) == 1 and loaded.evictions == 1
+    served = [g for g in (4, 5)
+              if engine.CVEngine(_strat(g=g), cache=loaded).run(
+                  folds, LAMS).extras["engine"]["cache"]["status"] == "hit"]
+    assert len(served) == 1
 
 
 # ------------------------------------------------------------ persistence

@@ -14,30 +14,25 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, packing, picholesky, solvers
-from repro.core.backends import PallasBackend, ReferenceBackend
-from repro.core.folds import make_folds
-from repro.data import make_regression_dataset
+from repro.core.backends import ReferenceBackend
 from repro.distributed import sharding as shardlib
+from repro.testing import strategies as props
 
-
-def _spd(h, seed=0):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (2 * h, h), jnp.float64)
-    return x.T @ x + h * jnp.eye(h)
+# shared generators (repro.testing.strategies): SPD builder + backend
+# constructor (kernel tiles sized 16 for this suite's h=64 problems)
+_spd = props.spd_matrix
 
 
 def _backend(name):
-    return (ReferenceBackend() if name == "reference"
-            else PallasBackend(chol_block=16, trsm_block=16))
+    return props.make_backend(name, block=16)
 
 
 @pytest.fixture(scope="module")
 def folds4():
-    x, y = make_regression_dataset(jax.random.PRNGKey(1), 400, 64,
-                                   dtype=jnp.float64)
-    return make_folds(x, y, 4)
+    return props.regression_folds(h=64, n=400, k=4)
 
 
-LAMS = jnp.logspace(-3, 2, 31)
+LAMS = props.log_grid(31)
 
 
 # ------------------------------------------------------ PackedFactor currency
@@ -89,8 +84,7 @@ def test_solve_packed_batched_factors(backend):
     np.testing.assert_allclose(out, exp, rtol=1e-8, atol=1e-10)
 
 
-@given(h=st.integers(4, 48), block=st.sampled_from([4, 8, 16]),
-       transpose=st.booleans())
+@given(h=props.heights(), block=props.blocks(), transpose=st.booleans())
 @settings(max_examples=15, deadline=None)
 def test_solve_lower_packed_property(h, block, transpose):
     """Packed sweep ≡ dense triangular solve for any shape, incl. h % B ≠ 0."""
@@ -153,8 +147,7 @@ def test_fit_consumes_packed_factors():
 # ---------------------------------------- escape hatches vs dense oracle
 
 
-@pytest.mark.parametrize("h,block", [(5, 8), (13, 8), (37, 8), (27, 16),
-                                     (61, 16)])
+@pytest.mark.parametrize("h,block", props.PACKED_SHAPES)
 def test_dense_escape_hatch_non_tile_multiple(h, block):
     """PackedFactor.dense() at sizes that are NOT a multiple of the tile
     (incl. h < block): round-trips the exact factor and solve_packed_ref
