@@ -14,9 +14,11 @@ perf trajectory is recorded across PRs; ``REPRO_BENCH_SMOKE=1`` re-emits
 the same schema on tiny problems for CI."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cv, cv_host, engine, factor_cache, packing
 from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.core.precision import resolve_precision
 
 from .common import SIZES, SMOKE, bench_pair, emit, emit_json, ridge_problem, timeit
 
@@ -222,6 +224,77 @@ def _overlap_vs_serial(h: int, k: int, q: int, chunk: int) -> dict:
     return rec
 
 
+def _precision_sweep(h: int, q: int, chunk: int) -> dict:
+    """Mixed-precision factor pipeline record (PR-5 tentpole).
+
+    One fp32-native ridge problem swept under three precision policies on
+    prebuilt engines (cold each time — no cache), recording:
+
+    * ``cold_s``            — wall clock of the full cold sweep,
+    * ``state_bytes``       — the fitted per-fold state payload (Θ + packed
+      anchors, measured from the actual cached arrays): on the kernel path
+      Θ is the ONLY O(h²) buffer in the whole fused sweep (the
+      interpolated factor lives tile-by-tile in registers), so the state
+      payload is the sweep's dominant resident factor memory — and every
+      cache entry / HBM residency budget is priced in it,
+    * ``replay_temp_bytes`` — XLA temp bytes of the λ-stream stage
+      (informational: on this CPU container bf16 arithmetic is emulated
+      through fp32 temporaries, so compute temps do NOT shrink here; on
+      TPU the MXU consumes bf16 natively),
+    * ``packed_bytes_per_lam`` — one packed factor at the storage dtype,
+    * the selected λ*, for the correctness half of the record.
+
+    Acceptance (non-smoke, enforced by ``scripts/check_bench_schema.py``):
+    ``bf16_store`` must deliver ≥1.3× cold-sweep speedup OR ≥1.9×
+    state-payload memory reduction vs ``fp32`` (on this container the win
+    is memory; on TPU both apply), and ``bf16_refined`` must reproduce the
+    fp32 argmin exactly (``argmin_match``).
+    """
+    x, y = ridge_problem(h)
+    x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+    folds = cv.make_folds(x, y, 5)
+    block = max(16, min(64, h // 8))
+    lams = jnp.logspace(-3, 2, q)
+
+    rec = {"h": h, "k": 5, "q": q, "chunk": chunk, "block": block,
+           "policies": {}}
+    results = {}
+    for pol in ("fp32", "bf16_store", "bf16_refined"):
+        cache = factor_cache.FactorCache()
+        eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4, block=block),
+                              precision=pol, lam_chunk=chunk, donate=False,
+                              cache=cache, reuse=False, cache_anchors=True)
+        r = eng.run(folds, lams)            # compile + trace (+ cache write)
+        t = timeit(lambda: eng.run(folds, lams), repeats=3, warmup=0)
+        temp = eng.replay_temp_bytes(folds, lams)
+        state_bytes = next(iter(cache.entries.values())).nbytes
+        store = resolve_precision(pol).store_dtype(jnp.float32)
+        results[pol] = (r, t, state_bytes)
+        rec["policies"][pol] = {
+            "cold_s": t,
+            "state_bytes": state_bytes,
+            "replay_temp_bytes": temp,
+            "packed_bytes_per_lam": packing.packed_nbytes(h, block, store),
+            "best_lam": float(r.best_lam),
+            "argmin_index": int(np.argmin(r.errors)),
+        }
+        emit(f"table3_precision_{pol}_h{h}", t,
+             f"cold={t:.3f}s state_bytes={state_bytes} "
+             f"best_lam={r.best_lam:.4g}")
+
+    r32, t32, m32 = results["fp32"]
+    _, t16, m16 = results["bf16_store"]
+    r16r, _, _ = results["bf16_refined"]
+    rec["speedup_bf16_store"] = t32 / t16
+    rec["mem_ratio_bf16_store"] = m32 / m16
+    rec["argmin_match"] = bool(float(r16r.best_lam) == float(r32.best_lam))
+    emit(f"table3_precision_summary_h{h}", 0.0,
+         f"speedup={rec['speedup_bf16_store']:.2f}x "
+         f"mem_ratio={rec['mem_ratio_bf16_store']:.2f}x "
+         f"argmin_match={rec['argmin_match']}")
+    return rec
+
+
 def run():
     if SMOKE:
         sizes, sweep_h, qs, chunk = [32], 32, [10, 25], 4
@@ -239,6 +312,9 @@ def run():
     # point (k=10, h=512) with a grid dense enough that skipped λ chunks
     # are real wall-clock
     ov_args = (32, 4, 16, 2) if SMOKE else (512, 10, 96, 8)
+    # precision sweep at the ISSUE-5 acceptance point (h=512, the paper's
+    # q=31 grid, fixed chunk so the memory ratio is the dtype ratio)
+    ps_args = (32, 10, 4) if SMOKE else (512, 31, 8)
     record = {
         "schema": "bench_table3/v1",
         "smoke": SMOKE,
@@ -248,6 +324,7 @@ def run():
         "sweep_scaling": _sweep_scaling(sweep_h, qs, chunk),
         "warm_vs_cold": _warm_vs_cold(wc_h, wc_qs, chunk),
         "overlap_vs_serial": _overlap_vs_serial(*ov_args),
+        "precision_sweep": _precision_sweep(*ps_args),
     }
     emit_json("BENCH_table3.json", record)
     return record

@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--folds", type=int, default=5)
     ap.add_argument("--mesh", action="store_true",
                     help="shard the engine sweep over all local devices")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["native", "fp32", "bf16_store", "bf16_refined",
+                             "fp64"],
+                    help="precision policy for the mixed-precision demo "
+                         "section (compared against fp32)")
     args = ap.parse_args()
 
     x, y = make_regression_dataset(jax.random.PRNGKey(0), args.n, args.h,
@@ -100,6 +105,28 @@ def main():
         status = r.extras["engine"]["cache"]["status"]
         print(f"{tag:8s} {dt:8.2f} {r.best_error:12.4f} "
               f"{r.best_lam:11.4g} {r.n_exact_chol:6d}  [{status}]")
+
+    # ---- mixed-precision policies: one PrecisionPolicy governs storage /
+    # compute / accumulation / fit dtypes and the per-chunk fp32 residual
+    # refinement.  bf16 storage halves the fitted state (and every cache
+    # entry); bf16_refined reproduces the fp32-selected λ*.
+    print(f"\nPrecision policies (fp32 baseline vs --precision="
+          f"{args.precision}):")
+    xf, yf = x.astype(jnp.float32), y.astype(jnp.float32)
+    folds32 = cv.make_folds(xf, yf, args.folds)
+    print(f"{'policy':14s} {'time(s)':>8s} {'min holdout':>12s} "
+          f"{'selected λ':>11s} {'state bytes':>12s}")
+    for pol in dict.fromkeys(["fp32", args.precision]):
+        pcache = factor_cache.FactorCache()
+        eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4), precision=pol,
+                              cache=pcache, reuse=False)
+        eng.run(folds32, lams)                    # compile + cache write
+        t0 = time.perf_counter()
+        r = eng.run(folds32, lams)
+        dt = time.perf_counter() - t0
+        entry = next(iter(pcache.entries.values()))
+        print(f"{pol:14s} {dt:8.2f} {r.best_error:12.4f} "
+              f"{r.best_lam:11.4g} {entry.nbytes:12d}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,21 @@ OVERLAP_KEYS = {"h", "k", "q", "chunk", "block", "serial_s", "pipelined_s",
 #: wall-clock at k=10 folds, h=512 on the benchmark host.
 OVERLAP_MIN_SPEEDUP = 1.15
 
+PRECISION_KEYS = {"h", "k", "q", "chunk", "block", "policies",
+                  "speedup_bf16_store", "mem_ratio_bf16_store",
+                  "argmin_match"}
+
+PRECISION_POLICY_KEYS = {"cold_s", "state_bytes", "replay_temp_bytes",
+                         "packed_bytes_per_lam", "best_lam", "argmin_index"}
+
+#: ISSUE-5 acceptance floors for the committed (non-smoke) record at
+#: h=512: bf16 storage must deliver ≥1.3× cold-sweep speedup OR ≥1.9×
+#: fitted-state memory reduction vs fp32 (either floor satisfies — on a
+#: CPU container the win is memory, on TPU both apply), and bf16_refined
+#: must reproduce the fp32 hold-out argmin exactly.
+PRECISION_MIN_SPEEDUP = 1.3
+PRECISION_MIN_MEM_RATIO = 1.9
+
 
 def check_table3(path: pathlib.Path) -> list[str]:
     errors = []
@@ -40,7 +55,7 @@ def check_table3(path: pathlib.Path) -> list[str]:
     if rec.get("schema") != "bench_table3/v1":
         errors.append(f"schema: expected bench_table3/v1, got {rec.get('schema')!r}")
     for key in ("sizes", "sweep_scaling", "warm_vs_cold", "overlap_vs_serial",
-                "jax_backend", "x64", "smoke"):
+                "precision_sweep", "jax_backend", "x64", "smoke"):
         if key not in rec:
             errors.append(f"missing top-level key {key!r}")
     for h, times in rec.get("sizes", {}).items():
@@ -101,6 +116,36 @@ def check_table3(path: pathlib.Path) -> list[str]:
                 f"overlap_vs_serial: committed speedup "
                 f"{ov['overlap_vs_serial']:.3f}x below the "
                 f"{OVERLAP_MIN_SPEEDUP}x acceptance floor")
+    ps = rec.get("precision_sweep", {})
+    missing = PRECISION_KEYS - ps.keys()
+    if missing:
+        errors.append(f"precision_sweep missing {sorted(missing)}")
+    else:
+        for pol in ("fp32", "bf16_store", "bf16_refined"):
+            prec = ps["policies"].get(pol)
+            if prec is None:
+                errors.append(f"precision_sweep.policies missing {pol!r}")
+                continue
+            pm = PRECISION_POLICY_KEYS - prec.keys()
+            if pm:
+                errors.append(
+                    f"precision_sweep.policies[{pol}] missing {sorted(pm)}")
+        if not ps["argmin_match"]:
+            errors.append(
+                "precision_sweep: bf16_refined selected a different λ* than "
+                "fp32 (refined reproduction of the fp32 argmin is the "
+                "correctness half of the mixed-precision contract)")
+        # the ≥1.3×-speed-OR-≥1.9×-memory floor is a property of the
+        # committed h=512 record; smoke shrinks to schema-validation scale
+        if not rec.get("smoke") and \
+                ps["speedup_bf16_store"] < PRECISION_MIN_SPEEDUP and \
+                ps["mem_ratio_bf16_store"] < PRECISION_MIN_MEM_RATIO:
+            errors.append(
+                f"precision_sweep: bf16_store delivers neither the "
+                f"{PRECISION_MIN_SPEEDUP}x speed floor "
+                f"({ps['speedup_bf16_store']:.3f}x) nor the "
+                f"{PRECISION_MIN_MEM_RATIO}x memory floor "
+                f"({ps['mem_ratio_bf16_store']:.3f}x)")
     return errors
 
 

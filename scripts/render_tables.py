@@ -1,6 +1,9 @@
-"""Render §Dry-run / §Roofline markdown tables from results/dryrun/*.json.
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun/*.json,
+and the committed bench records (``BENCH_table3.json``) including the
+mixed-precision ``precision_sweep`` section.
 
     PYTHONPATH=src python scripts/render_tables.py [--out results/tables.md]
+    PYTHONPATH=src python scripts/render_tables.py --bench BENCH_table3.json
 """
 import argparse
 import glob
@@ -14,11 +17,76 @@ def fmt(x, digits=3):
     return f"{x:.{digits}e}" if (abs(x) < 1e-2 or abs(x) >= 1e4) else f"{x:.{digits}f}"
 
 
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{n}B"
+        n /= 1024.0
+
+
+def render_bench(path):
+    """Markdown lines for the committed BENCH_table3.json record."""
+    rec = json.load(open(path))
+    lines = [f"# Bench record: {os.path.basename(path)} "
+             f"({rec.get('schema', '?')}, smoke={rec.get('smoke')})", ""]
+
+    wc = rec.get("warm_vs_cold", {})
+    if wc.get("grids"):
+        lines += ["## Warm-replay vs cold sweep", "",
+                  "| q | cold s | warm s | speedup | warm chol calls |",
+                  "|---|---|---|---|---|"]
+        for q, r in sorted(wc["grids"].items(), key=lambda kv: int(kv[0])):
+            lines.append(f"| {q} | {fmt(r['cold_s'])} | {fmt(r['warm_s'])} "
+                         f"| {fmt(r['warm_vs_cold_speedup'], 2)}x "
+                         f"| {r['warm_trace_cholesky_calls']} |")
+        lines.append("")
+
+    ov = rec.get("overlap_vs_serial", {})
+    if ov:
+        lines += ["## Pipelined early-stop vs serial full sweep", "",
+                  f"serial {fmt(ov.get('serial_s'))}s → early-stop "
+                  f"{fmt(ov.get('early_stop_s'))}s "
+                  f"(**{fmt(ov.get('overlap_vs_serial'), 2)}x**, "
+                  f"{ov.get('chunks_evaluated')}/{ov.get('chunks_total')} "
+                  f"chunks, argmin_match={ov.get('argmin_match')})", ""]
+
+    ps = rec.get("precision_sweep", {})
+    if ps.get("policies"):
+        lines += [f"## Mixed-precision sweep (h={ps.get('h')}, "
+                  f"q={ps.get('q')}, chunk={ps.get('chunk')})", "",
+                  "| policy | cold s | state bytes | packed B/λ | λ* |",
+                  "|---|---|---|---|---|"]
+        for pol in ("fp32", "bf16_store", "bf16_refined"):
+            r = ps["policies"].get(pol)
+            if r is None:
+                continue
+            lines.append(f"| {pol} | {fmt(r['cold_s'])} "
+                         f"| {fmt_bytes(r['state_bytes'])} "
+                         f"| {fmt_bytes(r['packed_bytes_per_lam'])} "
+                         f"| {fmt(r['best_lam'], 4)} |")
+        lines += ["",
+                  f"bf16_store vs fp32: "
+                  f"**{fmt(ps.get('speedup_bf16_store'), 2)}x** speed, "
+                  f"**{fmt(ps.get('mem_ratio_bf16_store'), 2)}x** state "
+                  f"memory; bf16_refined argmin_match="
+                  f"**{ps.get('argmin_match')}**", ""]
+    return lines
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--src", default="results/dryrun")
     ap.add_argument("--out", default="results/tables.md")
+    ap.add_argument("--bench", default=None,
+                    help="render a committed BENCH_*.json record instead "
+                         "of the dry-run tables")
     args = ap.parse_args()
+
+    if args.bench:
+        print("\n".join(render_bench(args.bench)))
+        return
 
     rows = []
     for f in sorted(glob.glob(os.path.join(args.src, "*.json"))):

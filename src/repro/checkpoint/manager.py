@@ -143,6 +143,12 @@ class CheckpointManager:
         leaves, treedef = _flatten(like)
         host = [np.load(os.path.join(path, f"leaf_{i:06d}.npy"))
                 for i in range(len(leaves))]
+        # extension dtypes (bfloat16) survive np.save only as raw bytes —
+        # view them back to the dtype the manifest recorded
+        for n, (arr, meta) in enumerate(zip(host, manifest["leaves"])):
+            if str(arr.dtype) != meta["dtype"]:
+                host[n] = arr.view(np.dtype(meta["dtype"])
+                                   ).reshape(meta["shape"])
         if shardings is not None:
             sh_leaves = jax.tree.leaves(shardings)
             host = [jax.device_put(a, s) for a, s in zip(host, sh_leaves)]

@@ -11,10 +11,12 @@ Public API:
   cv_host      pre-engine host-loop drivers (benchmark baseline, test oracle)
   bound        Theorem 4.4/4.7 error-bound terms
   ridge_cv     RidgeCV — the end-to-end, mesh-aware entry point
+  precision    PrecisionPolicy — the pipeline's mixed-precision contract
 """
 from . import (backends, bound, cv, cv_host, engine, factor_cache,  # noqa: F401
-               folds, packing, picholesky, ridge_cv, solvers)
+               folds, packing, picholesky, precision, ridge_cv, solvers)
 from .backends import resolve_backend  # noqa: F401
+from .precision import PrecisionPolicy, resolve_precision  # noqa: F401
 from .engine import CVEngine, CVStrategy, make_strategy  # noqa: F401
 from .factor_cache import FactorCache  # noqa: F401
 from .folds import CVResult, FoldData, make_folds  # noqa: F401

@@ -18,6 +18,14 @@ Resolution rules for :func:`resolve_backend`:
 
 Kernel imports happen lazily inside the Pallas methods so importing
 ``repro.core`` never drags in the Pallas toolchain.
+
+Every backend also carries the pipeline's
+:class:`~repro.core.precision.PrecisionPolicy` (``precision=``): the
+factorization runs at the policy's accumulation dtype (never 16-bit), the
+packed-domain solves feed the MXU at the compute dtype with full-precision
+accumulation, and solutions come back in the accumulation dtype.  The
+default ``native`` policy inherits every input dtype — bit-compatible with
+the pre-policy backends.
 """
 from __future__ import annotations
 
@@ -28,6 +36,9 @@ from typing import Union
 
 import jax
 import jax.numpy as jnp
+
+from .precision import PRESETS, PrecisionLike, PrecisionPolicy, \
+    resolve_precision
 
 __all__ = ["LinalgBackend", "ReferenceBackend", "PallasBackend",
            "CountingBackend", "resolve_backend", "BackendLike"]
@@ -45,6 +56,12 @@ class LinalgBackend:
     """
 
     name: str = "abstract"
+    precision: PrecisionPolicy = PRESETS["native"]
+
+    def with_precision(self, policy: PrecisionPolicy) -> "LinalgBackend":
+        """This backend with ``policy`` attached (same kernels, new dtype
+        contract).  Frozen-dataclass backends return a copy."""
+        return dataclasses.replace(self, precision=policy)
 
     def cholesky(self, a: jax.Array) -> jax.Array:
         raise NotImplementedError
@@ -78,10 +95,12 @@ class LinalgBackend:
         raise NotImplementedError
 
     def interp_solve(self, theta: jax.Array, lams: jax.Array, g: jax.Array,
-                     *, h: int, block: int, center=0.0) -> jax.Array:
+                     *, h: int, block: int, center=0.0,
+                     rhs_per_lam: bool = False) -> jax.Array:
         """Fused interpolant evaluation + substitution at a λ chunk:
         (q, h) solutions with no (q, h, h) — or even (q, P) on the kernel
-        path — intermediate."""
+        path — intermediate.  ``rhs_per_lam=True`` takes a per-λ RHS
+        (q, h[, m]) — the refinement residuals — instead of one shared g."""
         raise NotImplementedError
 
     def interp_factors(self, theta: jax.Array, lams: jax.Array,
@@ -92,14 +111,25 @@ class LinalgBackend:
 
 @dataclasses.dataclass(frozen=True)
 class ReferenceBackend(LinalgBackend):
-    """``jnp.linalg`` path — correct on every platform, XLA-fused."""
+    """``jnp.linalg`` path — correct on every platform, XLA-fused.
+
+    Mixed precision on this path keeps the *storage* contract (bf16 Θ and
+    packed rows stream at half the bytes) while the substitutions run at
+    the accumulation dtype — ``jnp.linalg`` has no 16-bit factorization,
+    and a bf16-stored factor is defined as the rounding of a
+    full-precision one, not a bf16 factorization.
+    """
 
     name: str = "reference"
+    precision: PrecisionPolicy = PRESETS["native"]
 
     def cholesky(self, a):
-        return jnp.linalg.cholesky(a)
+        # factorize at the accumulation dtype: bf16 inputs promote to fp32
+        return jnp.linalg.cholesky(
+            a.astype(self.precision.accum_dtype(a.dtype)))
 
     def solve_lower(self, l, b, *, transpose=False):
+        l = l.astype(self.precision.accum_dtype(l.dtype))
         b2 = b[..., None] if b.ndim == l.ndim - 1 else b
         out = jax.lax.linalg.triangular_solve(
             l, b2.astype(l.dtype), left_side=True, lower=True,
@@ -116,20 +146,31 @@ class ReferenceBackend(LinalgBackend):
 
     def solve_packed(self, pf, g):
         from . import packing
+        ad = self.precision.accum_dtype(pf.vec.dtype)
+        # vec is consumed at its storage dtype (tiles promote per-GEMM) —
+        # no full-width upcast copy of the packed batch
         fn = functools.partial(packing.solve_packed_ref,
-                               h=pf.h, block=pf.block)
+                               h=pf.h, block=pf.block, accum_dtype=ad)
         for _ in range(pf.vec.ndim - 1):   # batched factors via vmap
             fn = jax.vmap(fn, in_axes=(0, None))
-        return fn(pf.vec, g)
+        return fn(pf.vec, g.astype(ad))
 
-    def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+    def interp_solve(self, theta, lams, g, *, h, block, center=0.0,
+                     rhs_per_lam=False):
         from . import packing, picholesky
+        ad = self.precision.accum_dtype(theta.dtype)
         model = picholesky.PiCholesky(
-            theta=theta, center=jnp.asarray(center, theta.dtype),
+            theta=theta, center=jnp.asarray(center, ad),
             h=h, block=block)
-        vecs = model.eval_packed(jnp.atleast_1d(lams))   # (q, P) — no dense L
+        # (q, P) interpolated rows at the STORAGE dtype — the policy's
+        # memory win on this path; the substitution accumulates at accum
+        # with each tile promoted inside its GEMM (no full-width upcast)
+        vecs = model.eval_packed(jnp.atleast_1d(lams))
+        if rhs_per_lam:
+            return jax.vmap(lambda v, gi: packing.solve_packed_ref(
+                v, gi.astype(ad), h, block, accum_dtype=ad))(vecs, g)
         return jax.vmap(lambda v: packing.solve_packed_ref(
-            v, g.astype(theta.dtype), h, block))(vecs)
+            v, g.astype(ad), h, block, accum_dtype=ad))(vecs)
 
     def interp_factors(self, theta, lams, *, h, block, center=0.0):
         from . import picholesky
@@ -156,14 +197,28 @@ class PallasBackend(LinalgBackend):
     name: str = "pallas"
     chol_block: int = 256
     trsm_block: int = 256
+    precision: PrecisionPolicy = PRESETS["native"]
+
+    def _dtypes(self, input_dtype):
+        """(compute, accum) static kernel params — None when inherited, so
+        native-policy calls hit the exact pre-policy jit cache keys."""
+        p = self.precision
+        if p.is_native:
+            return None, None
+        return (str(p.compute_dtype(input_dtype)),
+                str(p.accum_dtype(input_dtype)))
 
     def cholesky(self, a):
         from repro.kernels.chol_blocked import cholesky_blocked
-        return cholesky_blocked(a, block=self.chol_block)
+        cd, ad = self._dtypes(a.dtype)
+        return cholesky_blocked(a, block=self.chol_block,
+                                compute_dtype=cd, accum_dtype=ad)
 
     def solve_lower(self, l, b, *, transpose=False):
         from repro.kernels.trsm import solve_lower_blocked
-        return solve_lower_blocked(l, b, self.trsm_block, transpose=transpose)
+        cd, ad = self._dtypes(l.dtype)
+        return solve_lower_blocked(l, b, self.trsm_block, transpose=transpose,
+                                   compute_dtype=cd, accum_dtype=ad)
 
     def pack_tril(self, mat, block):
         from repro.kernels.tri_pack import pack_tril
@@ -190,15 +245,20 @@ class PallasBackend(LinalgBackend):
     def solve_packed(self, pf, g):
         from repro.kernels.packed_trsm import solve_packed
 
-        fn = functools.partial(solve_packed, h=pf.h, block=pf.block)
+        cd, ad = self._dtypes(pf.vec.dtype)
+        fn = functools.partial(solve_packed, h=pf.h, block=pf.block,
+                               compute_dtype=cd, accum_dtype=ad)
         for _ in range(pf.vec.ndim - 1):
             fn = jax.vmap(fn, in_axes=(0, None))
         return fn(pf.vec, g)
 
-    def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+    def interp_solve(self, theta, lams, g, *, h, block, center=0.0,
+                     rhs_per_lam=False):
         from repro.kernels.poly_interp import interp_solve
+        cd, ad = self._dtypes(theta.dtype)
         return interp_solve(theta, jnp.atleast_1d(lams), g, h, block,
-                            center=center)
+                            center=center, rhs_per_lam=rhs_per_lam,
+                            compute_dtype=cd, accum_dtype=ad)
 
     def interp_factors(self, theta, lams, *, h, block, center=0.0):
         from repro.kernels.poly_interp import interp_factors
@@ -230,19 +290,38 @@ class CountingBackend(LinalgBackend):
     time: re-executing a compiled stage moves nothing.
     """
 
-    def __init__(self, inner: LinalgBackend):
+    def __init__(self, inner: LinalgBackend, _shared_counts: dict = None):
         self.inner = inner
-        self.n_cholesky = 0
-        self.by_stage: dict = {}      # stage label -> {op: trace-site count}
+        # stage label -> {op: trace-site count}; the single source of truth
+        # (n_cholesky is derived), shareable across with_precision views
+        self.by_stage: dict = {} if _shared_counts is None else _shared_counts
         self._stage: str | None = None
+
+    @property
+    def n_cholesky(self) -> int:
+        return sum(rec.get("cholesky", 0) for rec in self.by_stage.values())
 
     @property
     def name(self) -> str:          # fingerprint-transparent
         return self.inner.name
 
+    @property
+    def precision(self) -> PrecisionPolicy:   # policy-transparent
+        return self.inner.precision
+
+    def with_precision(self, policy: PrecisionPolicy) -> "CountingBackend":
+        """A view over the SAME counters with ``policy`` attached.
+
+        Never mutates this instance (an engine attaching its policy must
+        not retroactively change another engine sharing the backend), and
+        never forks the counts (callers hold this object to read them —
+        ops traced through the view keep landing here).
+        """
+        return CountingBackend(self.inner.with_precision(policy),
+                               _shared_counts=self.by_stage)
+
     def reset(self) -> None:
-        self.n_cholesky = 0
-        self.by_stage = {}
+        self.by_stage.clear()       # in place — views share this dict
 
     @contextlib.contextmanager
     def stage(self, label: str):
@@ -262,7 +341,6 @@ class CountingBackend(LinalgBackend):
         rec[op] = rec.get(op, 0) + 1
 
     def cholesky(self, a):
-        self.n_cholesky += 1
         self._count("cholesky")
         return self.inner.cholesky(a)
 
@@ -282,10 +360,12 @@ class CountingBackend(LinalgBackend):
         self._count("solve_packed")
         return self.inner.solve_packed(pf, g)
 
-    def interp_solve(self, theta, lams, g, *, h, block, center=0.0):
+    def interp_solve(self, theta, lams, g, *, h, block, center=0.0,
+                     rhs_per_lam=False):
         self._count("interp_solve")
         return self.inner.interp_solve(theta, lams, g, h=h, block=block,
-                                       center=center)
+                                       center=center,
+                                       rhs_per_lam=rhs_per_lam)
 
     def interp_factors(self, theta, lams, *, h, block, center=0.0):
         return self.inner.interp_factors(theta, lams, h=h, block=block,
@@ -296,7 +376,8 @@ BackendLike = Union[None, str, LinalgBackend]
 
 
 def resolve_backend(backend: BackendLike = None, *,
-                    block: int | None = None) -> LinalgBackend:
+                    block: int | None = None,
+                    precision: PrecisionLike = None) -> LinalgBackend:
     """Map a ``backend=`` argument to a concrete :class:`LinalgBackend`.
 
     ``block`` (when given) sizes **all** Pallas kernel tiles
@@ -306,16 +387,28 @@ def resolve_backend(backend: BackendLike = None, *,
     the compute tiles.  The packed-domain kernels take their tile size from
     the data's own layout block (:class:`~repro.core.packing.PackedFactor`),
     which is consistent by construction.
+
+    ``precision`` attaches a :class:`~repro.core.precision.PrecisionPolicy`
+    (name, policy object, or ``None`` = the environment default).  A
+    backend *instance* keeps its own policy unless ``precision`` is given
+    explicitly — the engine resolves its policy from the backend it ends up
+    with, so there is exactly one policy per pipeline.
     """
     if isinstance(backend, LinalgBackend):
+        if precision is not None:
+            pol = resolve_precision(precision)
+            if pol != backend.precision:
+                return backend.with_precision(pol)
         return backend
+    pol = resolve_precision(precision)
     if backend is None or backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "reference"
     if backend in ("reference", "ref", "jnp"):
-        return ReferenceBackend()
+        return ReferenceBackend(precision=pol)
     if backend == "pallas":
         if block is not None:
-            return PallasBackend(chol_block=block, trsm_block=block)
-        return PallasBackend()
+            return PallasBackend(chol_block=block, trsm_block=block,
+                                 precision=pol)
+        return PallasBackend(precision=pol)
     raise ValueError(f"unknown backend {backend!r}; expected 'auto', "
                      "'pallas', 'reference', or a LinalgBackend")

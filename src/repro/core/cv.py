@@ -43,7 +43,7 @@ _ENGINE_CACHE_MAX = 64
 
 
 def _engine(name: str, backend: BackendLike, mesh, engine_block=None,
-            **params) -> CVEngine:
+            precision=None, **params) -> CVEngine:
     """``engine_block`` sizes the Pallas kernel tiles (CVEngine.block);
     a strategy-level ``block`` (packing layout) goes in ``params``."""
     def hashable(v):
@@ -54,13 +54,14 @@ def _engine(name: str, backend: BackendLike, mesh, engine_block=None,
     key = (name, backend if isinstance(backend, str) or backend is None
            else id(backend),
            mesh if mesh in (None, "auto") else id(mesh), engine_block,
+           hashable(precision) if precision is not None else None,
            tuple((k, hashable(v)) for k, v in sorted(params.items())))
     if key not in _ENGINES:
         while len(_ENGINES) >= _ENGINE_CACHE_MAX:
             _ENGINES.pop(next(iter(_ENGINES)))
         _ENGINES[key] = CVEngine(make_strategy(name, **params),
                                  backend=backend, mesh=mesh,
-                                 block=engine_block)
+                                 block=engine_block, precision=precision)
     return _ENGINES[key]
 
 
@@ -70,9 +71,10 @@ def _fold_train_stats(folds: FoldData, f: jax.Array):
 
 def cv_exact_cholesky(folds: FoldData, lams: jax.Array, chol_fn=None, *,
                       backend: BackendLike = "reference",
-                      mesh=None) -> CVResult:
+                      mesh=None, precision=None) -> CVResult:
     """Chol baseline: k·q exact factorizations."""
-    eng = _engine("exact", backend, mesh, chol_fn=chol_fn)
+    eng = _engine("exact", backend, mesh, precision=precision,
+                  chol_fn=chol_fn)
     return eng.run(folds, lams)
 
 
@@ -87,9 +89,11 @@ def cv_picholesky(
     chol_fn=None,
     backend: BackendLike = "reference",
     mesh=None,
+    precision=None,
 ) -> CVResult:
     """piCholesky CV: k·g exact factorizations + interpolation for the rest."""
-    eng = _engine("picholesky", backend, mesh, engine_block=block, g=g,
+    eng = _engine("picholesky", backend, mesh, engine_block=block,
+                  precision=precision, g=g,
                   degree=degree, block=block, basis=basis, chol_fn=chol_fn)
     result = eng.run(folds, lams)
     result.extras["sample_lams"] = np.asarray(

@@ -76,6 +76,7 @@ from . import factor_cache as cachelib
 from . import packing, picholesky, solvers
 from .backends import BackendLike, LinalgBackend, resolve_backend
 from .folds import CVResult, FoldData, holdout_nrmse
+from .precision import PrecisionLike
 
 __all__ = [
     "CVStrategy", "CVEngine", "SweepChunk", "make_strategy", "STRATEGIES",
@@ -175,10 +176,18 @@ class _InterpolantErrors:
     evaluation + substitution at the local λ chunk, entirely in the packed
     domain — no (q_loc, h, h) factor batch is ever materialized (the
     pre-packed-pipeline eval_factor → dense-trsm route survives only as the
-    ``PiCholesky.eval_factor`` debug escape hatch)."""
+    ``PiCholesky.eval_factor`` debug escape hatch).
+
+    Under a refining precision policy (``bf16_refined``) each chunk's
+    low-precision solves are corrected by
+    :func:`~repro.core.picholesky.refine_solutions` — an fp32 residual
+    sweep per λ chunk, riding inside the same O(chunk · P) budget."""
 
     def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
         thetas = state.solve(lams, g_tr_f, backend=bk)       # (q_loc, h)
+        if bk.precision.refine_iters:
+            thetas = picholesky.refine_solutions(state, h_tr_f, g_tr_f,
+                                                 lams, thetas, backend=bk)
         return _errors_from_thetas(thetas, x_f, y_f)
 
 
@@ -227,7 +236,8 @@ class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
         pf = packing.PackedFactor(vec=vec, h=h, block=self.block)
         model = picholesky.fit(h_tr_f, aux, self.degree, block=self.block,
                                basis=self.basis, factors=pf, backend=bk)
-        return model, vec
+        # fit from the full-precision targets, cache at the storage dtype
+        return model, vec.astype(bk.precision.store_dtype(vec.dtype))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -272,8 +282,11 @@ class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
         base = picholesky.fit(h_tr[0], sample_full, self.degree,
                               block=self.block, chol_fn=chol, backend=bk)
         sample_rest = _sample_grid(lams, max(self.g_rest, 1))
+        # residual regression runs at the policy's fit dtype (bf16-stored
+        # anchors must not degrade the damped least squares)
+        fit_dtype = bk.precision.fit_dtype(h_tr.dtype)
         v_rest = picholesky.vandermonde(sample_rest, self.degree
-                                        ).astype(base.theta.dtype)
+                                        ).astype(fit_dtype)
         gram = v_rest.T @ v_rest
         lhs = gram + self.mu * jnp.diag(jnp.diag(gram))
         return dict(sample_rest=sample_rest, v_rest=v_rest, lhs=lhs,
@@ -285,11 +298,13 @@ class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
         eye = jnp.eye(h, dtype=h_tr_f.dtype)
         factors = jax.vmap(lambda lam: chol(h_tr_f + lam * eye)
                            )(aux["sample_rest"])
-        t = bk.pack_tril(factors, self.block)
-        resid = t - aux["v_rest"] @ aux["base_theta"]
+        fit_dtype = aux["v_rest"].dtype
+        t = bk.pack_tril(factors, self.block).astype(fit_dtype)
+        resid = t - aux["v_rest"] @ aux["base_theta"].astype(fit_dtype)
         dtheta = jnp.linalg.solve(aux["lhs"], aux["v_rest"].T @ resid)
-        return picholesky.PiCholesky(theta=aux["base_theta"] + dtheta,
-                                     center=aux["center"],
+        theta = (aux["base_theta"].astype(fit_dtype) + dtheta
+                 ).astype(aux["base_theta"].dtype)
+        return picholesky.PiCholesky(theta=theta, center=aux["center"],
                                      h=h, block=self.block)
 
     def cache_meta(self, lams):
@@ -370,8 +385,10 @@ class PinrmseStrategy(StrategyBase):
             return _errors_from_thetas(thetas, x_f, y_f)
 
         mean_err = jax.vmap(fold_curve)(h_tr, g_tr, x_folds, y_folds).mean(0)
-        fit_dtype = (jnp.float64 if jax.config.jax_enable_x64
-                     else jnp.float32)
+        # the curve fit runs at the policy's fit dtype (fp32 floor — the
+        # interpolated *errors* must not quantize), one definition shared
+        # with the factor fits instead of a local jax_enable_x64 probe
+        fit_dtype = bk.precision.fit_dtype(mean_err.dtype)
         v = picholesky.vandermonde(sample, self.degree).astype(fit_dtype)
         theta = jnp.linalg.solve(v.T @ v, v.T @ mean_err.astype(fit_dtype))
         return theta
@@ -474,6 +491,22 @@ class CVEngine:
                factors; a later run over the same anchors with a different
                degree/basis then refits Θ from them with zero
                factorizations.
+    precision: the pipeline's :class:`~repro.core.precision.PrecisionPolicy`
+               (a preset name, a policy object, or ``None`` = environment
+               default, normally ``native``).  One policy governs every
+               layer: factorizations run at its accumulation dtype, fitted
+               Θ / cached anchors are stored at its storage dtype (bf16
+               halves them, and the VMEM-auto ``lam_chunk`` doubles to
+               match), the fused solves feed the MXU at its compute dtype,
+               and ``refine_iters`` > 0 adds an fp32 residual-refinement
+               sweep per λ chunk on top of the low-precision
+               ``interp_solve`` (``bf16_refined`` reproduces the fp32
+               hold-out argmin at half the factor bytes).  The policy is
+               part of the cache fingerprint: a bf16 entry can never
+               silently serve an fp32 request.  When an explicit backend
+               *instance* is passed without ``precision``, the backend's
+               own policy is adopted — one policy per pipeline, resolved
+               once.
     """
 
     strategy: Union[CVStrategy, str]
@@ -485,6 +518,7 @@ class CVEngine:
     cache: Optional[cachelib.FactorCache] = None
     reuse: Union[bool, str] = "exact"
     cache_anchors: bool = False
+    precision: PrecisionLike = None
 
     def __post_init__(self):
         if isinstance(self.strategy, str):
@@ -494,7 +528,9 @@ class CVEngine:
         if self.reuse not in (False, "exact", "covering"):
             raise ValueError(f"reuse must be 'exact', 'covering' or False; "
                              f"got {self.reuse!r}")
-        self._bk = resolve_backend(self.backend, block=self.block)
+        self._bk = resolve_backend(self.backend, block=self.block,
+                                   precision=self.precision)
+        self._prec = self._bk.precision   # one policy per pipeline
         if self.donate is None:
             self.donate = jax.default_backend() != "cpu"
         self._sweeps: dict = {}   # mesh-key -> jitted fused sweep fn
@@ -535,13 +571,19 @@ class CVEngine:
     # -- λ chunking --------------------------------------------------------
 
     def _resolve_chunk(self, q_loc: int, h: int, dtype) -> Optional[int]:
-        """Static chunk size for a (q_loc,) λ shard, or None (no streaming)."""
+        """Static chunk size for a (q_loc,) λ shard, or None (no streaming).
+
+        The VMEM-auto heuristic budgets the chunk's packed working set at
+        the policy's *storage* dtype — bf16 storage doubles the chunk at
+        the same byte budget.
+        """
         if self.lam_chunk is None:
             return None
         if self.lam_chunk == "auto":
             block = getattr(self.strategy, "block", None) or self.block or 128
-            per_lam = packing.packed_size(h, block) * jnp.dtype(dtype).itemsize
-            return max(1, int(LAM_CHUNK_BUDGET_BYTES // per_lam))
+            return shardlib.auto_lam_chunk(
+                h, block, self._prec.store_dtype(dtype),
+                LAM_CHUNK_BUDGET_BYTES)
         chunk = int(self.lam_chunk)
         if chunk <= 0:
             raise ValueError(f"lam_chunk must be positive, got {chunk}")
@@ -940,7 +982,8 @@ class CVEngine:
         if meta is not None:
             key = cachelib.make_key(
                 h_tr, meta["anchors"], block=meta["params"]["block"],
-                backend=bk.name, params=meta["params"])
+                backend=bk.name, params=meta["params"],
+                precision=self._prec.descriptor())
 
             def cold_state(with_anchors):
                 state, pf, _ = self._pipelined_state(
@@ -1028,6 +1071,7 @@ class CVEngine:
         mesh = self._resolve_mesh(folds.fold_hess.shape[0])
         meta = dict(
             strategy=self.strategy.name, backend=self._bk.name,
+            precision=self._prec.name,
             mesh=None if mesh is None else dict(mesh.shape),
             donated=bool(self.donate), lam_chunk=self.lam_chunk,
             cache=last.cache)
@@ -1055,6 +1099,22 @@ class CVEngine:
                                  folds.fold_grad)
         lowered = self._sweep_fn(None).lower(h_tr, g_tr, folds.x_folds,
                                              folds.y_folds, lams)
+        return int(lowered.compile().memory_analysis().temp_size_in_bytes)
+
+    def replay_temp_bytes(self, folds: FoldData, lams: jax.Array) -> int:
+        """XLA temp bytes of the λ-stream (replay) stage alone, from a
+        fitted state — the policy-governed O(chunk · P) working set without
+        the ``fold_state`` factorization buffers.  This is the quantity the
+        precision policy's storage dtype halves (the committed
+        ``precision_sweep`` bench record reads it), measured the same way
+        as :meth:`sweep_temp_bytes`."""
+        lams = jnp.asarray(lams)
+        h_tr, g_tr = self._split(folds.hess, folds.grad, folds.fold_hess,
+                                 folds.fold_grad)
+        state, _ = self._state_fn(None, False)(
+            h_tr, g_tr, folds.x_folds, folds.y_folds, lams)
+        lowered = self._replay_fn(None).lower(
+            state, h_tr, g_tr, folds.x_folds, folds.y_folds, lams)
         return int(lowered.compile().memory_analysis().temp_size_in_bytes)
 
     def _acquire_cached_state(self, meta: dict, key, cold_state_fn):
@@ -1095,7 +1155,8 @@ class CVEngine:
         populate) → replay.  Returns (error grid, cache_info, n_chol)."""
         key = cachelib.make_key(
             h_tr, meta["anchors"], block=meta["params"]["block"],
-            backend=self._bk.name, params=meta["params"])
+            backend=self._bk.name, params=meta["params"],
+            precision=self._prec.descriptor())
         k = h_tr.shape[0]
 
         def cold_state(with_anchors):
@@ -1148,6 +1209,7 @@ class CVEngine:
             lams, errs.mean(0), n_chol,
             engine=dict(
                 strategy=self.strategy.name, backend=self._bk.name,
+                precision=self._prec.name,
                 mesh=None if mesh is None else dict(mesh.shape),
                 donated=bool(self.donate), lam_chunk=self.lam_chunk,
                 cache=cache_info))

@@ -19,7 +19,10 @@ Keying — a :class:`CacheKey` is a content fingerprint, never an object id:
 * ``dtype``         of the training Hessians,
 * ``backend``       name of the :class:`~repro.core.backends.LinalgBackend`
                     that produced the factors,
-* ``params``        the strategy's static fit parameters (degree, basis, …).
+* ``params``        the strategy's static fit parameters (degree, basis, …),
+* ``precision``     the :class:`~repro.core.precision.PrecisionPolicy`
+                    descriptor the state was fitted/stored under — a bf16
+                    entry can never silently serve an fp32 request.
 
 Three derived digests serve three lookups:
 
@@ -109,12 +112,14 @@ class CacheKey:
     dtype: str
     backend: str
     params: Tuple[Tuple[str, Any], ...]
+    precision: str = "native"
 
     def _payload(self) -> dict:
         return dict(fold_hashes=list(self.fold_hashes),
                     anchors=list(self.anchors), h=self.h, block=self.block,
                     dtype=self.dtype, backend=self.backend,
-                    params=[list(p) for p in self.params])
+                    params=[list(p) for p in self.params],
+                    precision=self.precision)
 
     def digest(self) -> str:
         return _digest(self._payload())
@@ -141,17 +146,20 @@ class CacheKey:
                    anchors=tuple(float(a) for a in rec["anchors"]),
                    h=int(rec["h"]), block=int(rec["block"]),
                    dtype=str(rec["dtype"]), backend=str(rec["backend"]),
-                   params=tuple((str(k), v) for k, v in rec["params"]))
+                   params=tuple((str(k), v) for k, v in rec["params"]),
+                   precision=str(rec.get("precision", "native")))
 
 
 def make_key(h_tr, anchors, *, block: int, backend: str,
-             params: Dict[str, Any]) -> CacheKey:
+             params: Dict[str, Any], precision: str = "native") -> CacheKey:
     """Fingerprint a sweep's λ-independent inputs.
 
     ``h_tr``: (k, h, h) per-fold training Hessians (hashed on host — one
     device sync per ``run``, the price of content addressing).
     ``anchors``: the anchor-λ grid the fit would factorize at.
     ``params``: the strategy's static fit parameters (degree, basis, g, …).
+    ``precision``: the policy descriptor the state is fitted/stored under
+    (:meth:`~repro.core.precision.PrecisionPolicy.descriptor`).
     """
     h_tr = np.asarray(h_tr)
     return CacheKey(
@@ -159,17 +167,37 @@ def make_key(h_tr, anchors, *, block: int, backend: str,
         anchors=tuple(float(a) for a in np.asarray(anchors).ravel()),
         h=int(h_tr.shape[-1]), block=int(block),
         dtype=str(h_tr.dtype), backend=str(backend),
-        params=tuple(sorted(params.items())))
+        params=tuple(sorted(params.items())),
+        precision=str(precision))
 
 
 def _tree_nbytes(tree) -> int:
     """Total bytes of every array leaf (aval-based — never syncs a
-    device buffer that is still being computed)."""
+    device buffer that is still being computed).  Reflects the leaves'
+    *actual* dtypes — a post-``astype`` bf16 state counts its bf16 bytes,
+    so ``max_bytes`` LRU budgets stay honest under mixed precision."""
     total = 0
     for leaf in jax.tree.leaves(tree):
         nbytes = getattr(leaf, "nbytes", None)
         total += int(nbytes if nbytes is not None
                      else np.asarray(leaf).nbytes)
+    return total
+
+
+def _tree_nbytes_at(tree, dtype) -> int:
+    """What the same leaves would weigh if every float leaf were stored at
+    ``dtype`` — the baseline the ``bytes_saved`` counter compares against
+    (the training-Hessian dtype the problem arrived in)."""
+    import jax.numpy as jnp
+    item = np.dtype(dtype).itemsize
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        a_dt = getattr(leaf, "dtype", None)
+        size = int(getattr(leaf, "size", np.asarray(leaf).size))
+        if a_dt is not None and jnp.issubdtype(a_dt, jnp.inexact):
+            total += size * item
+        else:
+            total += size * np.dtype(a_dt or np.float64).itemsize
     return total
 
 
@@ -182,7 +210,9 @@ class CacheEntry:
     state: picholesky.PiCholesky          # theta (k, r+1, P), center (k,)
     anchors: Optional[packing.PackedFactor] = None   # vec (k, g, P)
     hits: int = 0
-    nbytes: int = 0                       # array payload (state + anchors)
+    nbytes: int = 0                       # array payload (state + anchors),
+    #                                       at the leaves' POST-astype dtypes
+    bytes_saved: int = 0                  # vs storing at the Hessian dtype
     last_used: int = 0                    # LRU clock tick of last touch
 
 
@@ -233,11 +263,17 @@ class FactorCache:
         return sum(e.nbytes for e in self.entries.values())
 
     @property
+    def bytes_saved(self) -> int:
+        """Bytes mixed-precision storage is saving vs keeping every resident
+        entry at its problem's (training-Hessian) dtype."""
+        return sum(e.bytes_saved for e in self.entries.values())
+
+    @property
     def stats(self) -> dict:
         return dict(entries=len(self.entries), hits=self.hits,
                     misses=self.misses, anchor_hits=self.anchor_hits,
                     evictions=self.evictions, bytes=self.total_bytes,
-                    max_bytes=self.max_bytes)
+                    bytes_saved=self.bytes_saved, max_bytes=self.max_bytes)
 
     def _touch(self, entry: CacheEntry) -> None:
         self._tick += 1
@@ -289,8 +325,11 @@ class FactorCache:
     def put(self, key: CacheKey, state: picholesky.PiCholesky,
             anchors: Optional[packing.PackedFactor] = None) -> CacheEntry:
         digest = key.digest()
+        nbytes = _tree_nbytes((state, anchors))
+        baseline = _tree_nbytes_at((state, anchors), key.dtype)
         entry = CacheEntry(key=key, state=state, anchors=anchors,
-                           nbytes=_tree_nbytes((state, anchors)))
+                           nbytes=nbytes,
+                           bytes_saved=max(0, baseline - nbytes))
         if digest not in self.entries:
             self._by_base.setdefault(key.base_digest(), []).append(digest)
         self.entries[digest] = entry

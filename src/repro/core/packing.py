@@ -33,6 +33,7 @@ __all__ = [
     "tile_pos_map",
     "column_starts",
     "packed_size",
+    "packed_nbytes",
     "pack_tril",
     "unpack_tril",
     "pack_tril_rowwise",
@@ -99,6 +100,13 @@ def column_starts(h: int, block: int) -> np.ndarray:
 def packed_size(h: int, block: int) -> int:
     nt = num_tiles(h, block)
     return (nt * (nt + 1) // 2) * block * block
+
+
+def packed_nbytes(h: int, block: int, dtype=jnp.float32) -> int:
+    """Bytes one packed factor weighs at ``dtype`` — the quantity the
+    precision policy's storage dtype halves (bf16 vs fp32) and the
+    VMEM-auto λ-chunk heuristic budgets against."""
+    return packed_size(h, block) * jnp.dtype(dtype).itemsize
 
 
 def _padded(mat: jax.Array, block: int) -> jax.Array:
@@ -235,6 +243,24 @@ class PackedFactor:
     def n_blocks(self) -> int:
         return self.nt * (self.nt + 1) // 2
 
+    @property
+    def dtype(self):
+        return self.vec.dtype
+
+    @property
+    def nbytes(self) -> int:
+        """Array-payload bytes (post-``astype`` — what a cache entry or a
+        streamed chunk actually weighs)."""
+        return int(self.vec.size) * jnp.dtype(self.vec.dtype).itemsize
+
+    def astype(self, dtype) -> "PackedFactor":
+        """Same factor, re-stored at ``dtype`` — round-trips the pytree
+        (static ``h``/``block`` survive; only ``vec`` is cast).  The
+        precision policy's storage cast: ``astype('bfloat16')`` halves
+        :attr:`nbytes` for fp32 factors."""
+        return PackedFactor(vec=self.vec.astype(dtype), h=self.h,
+                            block=self.block)
+
     @classmethod
     def from_dense(cls, mat: jax.Array, block: int = 128) -> "PackedFactor":
         return cls(vec=pack_tril(mat, block), h=mat.shape[-1], block=block)
@@ -285,23 +311,35 @@ def invert_diag_tiles(diag: jax.Array) -> jax.Array:
 
 
 def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int, *,
-                       transpose: bool = False) -> jax.Array:
+                       transpose: bool = False,
+                       accum_dtype=None) -> jax.Array:
     """Solve ``L w = g`` (or ``Lᵀ w = g``) from the tile-packed factor.
 
     Pure-jnp reference for :mod:`repro.kernels.packed_trsm`: walks the
     tile-column-major panels (column sweep forward, reverse column sweep for
     the transpose — column ``i`` of packed ``L`` holds exactly row ``i`` of
     ``Lᵀ``) without ever unpacking the dense matrix.  ``g``: (h,) or (h, q).
+
+    ``accum_dtype``: the substitution/solution dtype.  Defaults to the
+    factor's own dtype, promoted to fp32 for 16-bit factors — the packed
+    ``vec`` is consumed AT its storage dtype (each ``B×B`` tile promotes
+    inside its GEMM), so a bf16-stored factor batch never materializes a
+    full-width upcast copy: that is the reference path's half of the
+    mixed-precision memory contract.
     """
+    from .precision import default_accum_dtype
+
     nt = num_tiles(h, block)
     hp = nt * block
+    ad = (jnp.dtype(accum_dtype) if accum_dtype is not None
+          else default_accum_dtype(vec.dtype))
     squeeze = g.ndim == 1
-    g2 = (g[:, None] if squeeze else g).astype(vec.dtype)
+    g2 = (g[:, None] if squeeze else g).astype(ad)
     if hp != h:
         g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
     tiles = vec.reshape(-1, block, block)
     pmap = tile_pos_map(h, block)
-    diag = _diag_tiles(tiles, h, block)
+    diag = _diag_tiles(tiles, h, block).astype(ad)
 
     w = [None] * nt
     order = range(nt - 1, -1, -1) if transpose else range(nt)
@@ -309,17 +347,19 @@ def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int, *,
         acc = g2[i * block:(i + 1) * block]
         if transpose:      # row i of Lᵀ = column i of packed L, transposed
             for t in range(i + 1, nt):
-                acc = acc - tiles[pmap[t, i]].T @ w[t]
+                acc = acc - (tiles[pmap[t, i]].T @ w[t]).astype(ad)
         else:
             for j in range(i):
-                acc = acc - tiles[pmap[i, j]] @ w[j]
+                acc = acc - (tiles[pmap[i, j]] @ w[j]).astype(ad)
         w[i] = jax.lax.linalg.triangular_solve(
             diag[i], acc, left_side=True, lower=True, transpose_a=transpose)
     out = jnp.concatenate(w, axis=0)[:h]
     return out[:, 0] if squeeze else out
 
 
-def solve_packed_ref(vec: jax.Array, g: jax.Array, h: int, block: int) -> jax.Array:
+def solve_packed_ref(vec: jax.Array, g: jax.Array, h: int, block: int,
+                     accum_dtype=None) -> jax.Array:
     """L Lᵀ θ = g entirely in the packed domain (forward + back sweep)."""
-    w = solve_lower_packed(vec, g, h, block)
-    return solve_lower_packed(vec, w, h, block, transpose=True)
+    w = solve_lower_packed(vec, g, h, block, accum_dtype=accum_dtype)
+    return solve_lower_packed(vec, w, h, block, transpose=True,
+                              accum_dtype=accum_dtype)

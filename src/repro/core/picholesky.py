@@ -28,7 +28,7 @@ from . import packing
 from .backends import BackendLike, resolve_backend
 
 __all__ = ["PiCholesky", "fit", "evaluate", "evaluate_packed", "vandermonde",
-           "choose_sample_lambdas"]
+           "choose_sample_lambdas", "refine_solutions"]
 
 
 def vandermonde(lams: jax.Array, degree: int, center: float | jax.Array = 0.0) -> jax.Array:
@@ -127,6 +127,13 @@ def fit(
     Hessian itself is not needed (the factor-cache refit path hands in
     cached anchors only): pass ``hessian=None`` and the geometry is taken
     from the factors.
+
+    Precision: the backend's policy governs the fit — the normal equations
+    ``Θ = (VᵀV)⁻¹VᵀT`` run at the policy's *fit* dtype (floored at fp32, so
+    bf16-stored anchor targets never degrade the regression itself), and
+    the returned Θ is cast to the *storage* dtype (bf16 halves the cached
+    state).  The ``native`` policy inherits the target dtype end to end —
+    bit-compatible with the pre-policy fit.
     """
     if hessian is None and factors is None:
         raise ValueError("fit needs a hessian to factorize or "
@@ -158,13 +165,17 @@ def fit(
         targets = bk.pack_tril(factors, block)
 
     center = jnp.mean(sample_lams) if basis == "centered" else jnp.zeros((), sample_lams.dtype)
-    v = vandermonde(sample_lams, degree, center).astype(targets.dtype)
+    fit_dtype = bk.precision.fit_dtype(targets.dtype)
+    store_dtype = bk.precision.store_dtype(targets.dtype)
+    v = vandermonde(sample_lams, degree, center).astype(fit_dtype)
 
-    # Steps 5–6: Θ = (VᵀV)⁻¹ VᵀT — normal equations exactly as in the paper.
+    # Steps 5–6: Θ = (VᵀV)⁻¹ VᵀT — normal equations exactly as in the
+    # paper, at the fit dtype; Θ is then stored at the storage dtype.
     h_lam = v.T @ v
-    g_lam = v.T @ targets
+    g_lam = v.T @ targets.astype(fit_dtype)
     theta = jnp.linalg.solve(h_lam, g_lam)
-    return PiCholesky(theta=theta, center=center.astype(targets.dtype), h=h, block=block)
+    return PiCholesky(theta=theta.astype(store_dtype),
+                      center=center.astype(fit_dtype), h=h, block=block)
 
 
 def evaluate_packed(model: PiCholesky, lams: jax.Array) -> "packing.PackedFactor":
@@ -176,3 +187,41 @@ def evaluate(model: PiCholesky, lams: jax.Array) -> jax.Array:
     """Dense interpolated factors (q, h, h) — debug escape hatch; the sweep
     path consumes :func:`evaluate_packed` / :meth:`PiCholesky.solve`."""
     return model.eval_factor(lams)
+
+
+def refine_solutions(model: PiCholesky, hessian: jax.Array, g: jax.Array,
+                     lams: jax.Array, thetas: jax.Array,
+                     backend: BackendLike = "reference") -> jax.Array:
+    """Iterative refinement of ``interp_solve`` solutions — the accuracy
+    half of the ``bf16_refined`` policy.
+
+    The low-precision interpolated factor is a *preconditioner*: each
+    sweep forms the true residual ``r(λ) = g − (H + λI)θ(λ)`` at the
+    policy's accumulation dtype (exact λ — never the bf16-quantized one the
+    Horner evaluation used) and corrects through one more fused interpolant
+    solve with the per-λ residuals as RHS.  One iteration contracts the
+    solve error by O(κ·ε_bf16), which is what lets a bf16-stored factor
+    reproduce the fp32 hold-out argmin (Wilson et al.: hold-out selection
+    tolerates controlled solve error; refinement makes the control
+    explicit).  Runs per λ chunk inside ``fold_errors``, so its transient
+    (q_chunk, h) residuals ride inside the existing O(chunk · P) budget.
+
+    No-op (returns ``thetas`` unchanged) when the backend policy's
+    ``refine_iters`` is 0.
+    """
+    bk = resolve_backend(backend)
+    iters = bk.precision.refine_iters
+    if iters <= 0:
+        return thetas
+    ad = bk.precision.accum_dtype(model.theta.dtype)
+    hs = hessian.astype(ad)
+    gs = g.astype(ad)
+    lam_col = jnp.atleast_1d(lams).astype(ad)[:, None]
+    th = jnp.atleast_2d(thetas).astype(ad)              # (q, h)
+    for _ in range(iters):
+        resid = gs[None, :] - (th @ hs + lam_col * th)  # H symmetric
+        delta = bk.interp_solve(model.theta, jnp.atleast_1d(lams), resid,
+                                h=model.h, block=model.block,
+                                center=model.center, rhs_per_lam=True)
+        th = th + delta.astype(ad)
+    return th.reshape(thetas.shape) if thetas.ndim == 1 else th

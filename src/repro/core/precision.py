@@ -1,0 +1,212 @@
+"""PrecisionPolicy — the factor pipeline's one mixed-precision contract.
+
+The paper's implementation claim is that piCholesky "maximally exploits the
+compute power of modern architectures"; on TPU that means bf16 MXU
+throughput and halved HBM/VMEM traffic for every packed factor the sweep
+streams.  Before this module each layer silently inherited whatever dtype
+the Hessian arrived in; now one :class:`PrecisionPolicy` names four dtype
+roles plus a refinement count, and every layer — Pallas kernels, packed
+currency, backends, ``picholesky.fit``, the CV engine, the factor cache —
+consumes the policy instead of an implicit dtype:
+
+``store``
+    What fitted state weighs: Θ coefficients, cached packed anchor
+    factors, and the streamed ``(chunk, P)`` interpolant rows.  ``bfloat16``
+    halves every cache entry and doubles the VMEM-auto λ chunk.
+``compute``
+    The dtype fed to the MXU GEMMs (substitution sweeps, Horner tiles).
+``accum``
+    The dtype GEMMs accumulate in and solutions are returned in —
+    ``float32`` whenever ``compute`` is a 16-bit type (never accumulate a
+    substitution recurrence in bf16).  Factorizations (Cholesky, diagonal
+    tile inversion) also run here: a bf16 *stored* factor is produced by
+    rounding an fp32 factorization, never by factorizing in bf16.
+``fit``
+    The dtype of the polynomial fit (Vandermonde normal equations) and of
+    every λ value that parameterizes it — floored at ``float32`` so a bf16
+    problem never quantizes its regularizer grid.
+``refine_iters``
+    Iterative-refinement sweeps run per λ chunk on top of the low-precision
+    ``interp_solve``: the residual ``g − (H + λI)θ`` is formed in ``accum``
+    precision and corrected through one more interpolant solve.  The
+    approximate-CV literature (Wilson et al.; Pilanci & Wainwright) shows
+    hold-out *selection* tolerates controlled solve error — refinement is
+    the mechanism that makes the tolerance explicit: ``bf16_refined``
+    reproduces the fp32 argmin while storing factors at half the bytes.
+
+``None`` for any dtype role means *inherit the input's dtype* (``accum``
+additionally promotes 16-bit compute to fp32, ``fit`` floors at fp32) — the
+``native`` preset is therefore bit-compatible with the pre-policy pipeline.
+
+Presets
+-------
+
+=============== ========= ========= ======== ======== ======
+name            store     compute   accum    fit      refine
+=============== ========= ========= ======== ======== ======
+``native``      inherit   inherit   auto     auto     0
+``fp32``        float32   float32   float32  float32  0
+``bf16_store``  bfloat16  bfloat16  float32  float32  0
+``bf16_refined``bfloat16  bfloat16  float32  float32  1
+``fp64``        float64   float64   float64  float64  0
+=============== ========= ========= ======== ======== ======
+
+The environment variable ``REPRO_TEST_PRECISION`` overrides the *default*
+policy (what ``resolve_precision(None)`` returns) — the CI dtype-matrix
+hook that re-runs the packed-pipeline and factor-cache parity suites under
+``fp32`` and ``bf16_refined`` without touching a single call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PrecisionPolicy", "PRESETS", "resolve_precision", "tree_astype",
+           "default_accum_dtype", "PrecisionLike"]
+
+
+def _dt(name) -> jnp.dtype:
+    return jnp.dtype(name)
+
+
+def default_accum_dtype(compute_dtype) -> jnp.dtype:
+    """THE never-accumulate-in-16-bit rule: fp32 when the compute dtype is
+    16-bit, the compute dtype itself otherwise.  One definition shared by
+    :meth:`PrecisionPolicy.accum_dtype`, the Pallas kernels' dtype
+    resolution, and the jnp reference solvers — so the reference oracle
+    and the kernels cannot drift onto different accumulation defaults."""
+    cd = _dt(compute_dtype)
+    return _dt(jnp.float32) if cd.itemsize < 4 else cd
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Dtype roles of the factor pipeline (see module doc).
+
+    Fields hold dtype *names* (or ``None`` = inherit/derive) so the policy
+    is hashable, JSON-trivial, and usable as a static jit argument.
+    """
+
+    name: str = "native"
+    store: Optional[str] = None     # None: inherit the input dtype
+    compute: Optional[str] = None   # None: inherit the input dtype
+    accum: Optional[str] = None     # None: fp32 if compute is 16-bit
+    fit: Optional[str] = None       # None: input dtype, floored at fp32
+    refine_iters: int = 0
+
+    def __post_init__(self):
+        for role in ("store", "compute", "accum", "fit"):
+            v = getattr(self, role)
+            if v is not None:
+                jnp.dtype(v)        # fail at construction, not deep in a jit
+        if self.refine_iters < 0:
+            raise ValueError(
+                f"refine_iters must be >= 0, got {self.refine_iters}")
+
+    # -- dtype resolution (input dtype -> role dtype) ----------------------
+
+    def store_dtype(self, input_dtype) -> jnp.dtype:
+        """Dtype fitted/cached factor state is stored in."""
+        return _dt(self.store) if self.store else _dt(input_dtype)
+
+    def compute_dtype(self, input_dtype) -> jnp.dtype:
+        """Dtype fed to the substitution/Horner GEMMs."""
+        return _dt(self.compute) if self.compute else _dt(input_dtype)
+
+    def accum_dtype(self, input_dtype) -> jnp.dtype:
+        """Dtype GEMMs accumulate in, solutions return in, and
+        factorizations run in.  Never 16-bit: an unset ``accum`` promotes a
+        16-bit compute dtype to fp32."""
+        if self.accum:
+            return _dt(self.accum)
+        return default_accum_dtype(self.compute_dtype(input_dtype))
+
+    def fit_dtype(self, input_dtype) -> jnp.dtype:
+        """Dtype of the polynomial fit and of λ values — floored at fp32 so
+        reduced-precision data never quantizes the regularizer grid.  This
+        is the one definition of the default fit dtype (the engine's old
+        ``jax_enable_x64`` probe collapsed into the inherit rule: fp64
+        inputs fit in fp64, fp32 inputs in fp32)."""
+        if self.fit:
+            return _dt(self.fit)
+        return jnp.promote_types(_dt(input_dtype), jnp.float32)
+
+    # -- derived ----------------------------------------------------------
+
+    @property
+    def is_native(self) -> bool:
+        return (self.store is None and self.compute is None
+                and self.accum is None and self.fit is None
+                and self.refine_iters == 0)
+
+    def bytes_ratio(self, input_dtype) -> float:
+        """Storage shrink factor vs the input dtype (2.0 for bf16 ÷ fp32)."""
+        return (_dt(input_dtype).itemsize
+                / self.store_dtype(input_dtype).itemsize)
+
+    def descriptor(self) -> str:
+        """Canonical content string for cache fingerprints — derived from
+        the dtype roles, never the preset name, so two policies that round
+        identically fingerprint identically."""
+        if self.is_native:
+            return "native"
+        return (f"store={self.store or 'inherit'},"
+                f"compute={self.compute or 'inherit'},"
+                f"accum={self.accum or 'auto'},"
+                f"fit={self.fit or 'auto'},"
+                f"refine={self.refine_iters}")
+
+
+PRESETS = {
+    "native": PrecisionPolicy(),
+    "fp32": PrecisionPolicy(name="fp32", store="float32", compute="float32",
+                            accum="float32", fit="float32"),
+    "bf16_store": PrecisionPolicy(name="bf16_store", store="bfloat16",
+                                  compute="bfloat16", accum="float32",
+                                  fit="float32"),
+    "bf16_refined": PrecisionPolicy(name="bf16_refined", store="bfloat16",
+                                    compute="bfloat16", accum="float32",
+                                    fit="float32", refine_iters=1),
+    "fp64": PrecisionPolicy(name="fp64", store="float64", compute="float64",
+                            accum="float64", fit="float64"),
+}
+
+PrecisionLike = Union[None, str, PrecisionPolicy]
+
+
+def resolve_precision(policy: PrecisionLike = None) -> PrecisionPolicy:
+    """Map a ``precision=`` argument to a concrete :class:`PrecisionPolicy`.
+
+    ``None`` resolves to the default policy: the ``REPRO_TEST_PRECISION``
+    preset when that variable is set (the CI dtype-matrix hook), otherwise
+    ``native`` — bit-compatible with the pre-policy pipeline.
+    """
+    if policy is None:
+        policy = os.environ.get("REPRO_TEST_PRECISION", "native")
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    try:
+        return PRESETS[policy]
+    except KeyError:
+        raise ValueError(f"unknown precision policy {policy!r}; "
+                         f"have {sorted(PRESETS)}") from None
+
+
+def tree_astype(tree, dtype):
+    """Cast every floating array leaf of a pytree to ``dtype``.
+
+    Round-trips registered dataclasses (``PackedFactor``, ``PiCholesky``)
+    — static fields survive, only inexact array leaves are cast.
+    """
+    dt = _dt(dtype)
+
+    def cast(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf.astype(dt)
+        return leaf
+
+    return jax.tree.map(cast, tree)

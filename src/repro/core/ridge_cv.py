@@ -17,6 +17,7 @@ from repro.distributed.context import MeshCtx
 
 from . import cv as cvlib
 from . import picholesky
+from .precision import resolve_precision
 
 __all__ = ["RidgeCV"]
 
@@ -36,6 +37,7 @@ class RidgeCV:
     ctx: Optional[MeshCtx] = None
     backend: object = "reference"   # engine linalg backend ('auto'|'pallas'|…)
     cv_mesh: object = None          # None | 'auto' | Mesh for the λ sweep
+    precision: object = None        # PrecisionPolicy | preset name | None
 
     def lambdas(self) -> jax.Array:
         return jnp.logspace(jnp.log10(self.lam_lo), jnp.log10(self.lam_hi),
@@ -51,10 +53,12 @@ class RidgeCV:
         lams = self.lambdas()
         if self.method == "exact":
             return cvlib.cv_exact_cholesky(folds, lams, backend=self.backend,
-                                           mesh=self.cv_mesh)
+                                           mesh=self.cv_mesh,
+                                           precision=self.precision)
         return cvlib.cv_picholesky(folds, lams, g=self.g_samples,
                                    degree=self.degree, block=self.block,
-                                   backend=self.backend, mesh=self.cv_mesh)
+                                   backend=self.backend, mesh=self.cv_mesh,
+                                   precision=self.precision)
 
     def fit_theta(self, x: jax.Array, y: jax.Array):
         """CV-select λ*, then solve on the full data at λ*."""
@@ -63,6 +67,10 @@ class RidgeCV:
         result = self.fit(x, y)
         hess = x.T @ x
         grad = x.T @ y
+        # λ* lives at the policy's fit dtype (fp32 floor), NEVER the data's:
+        # casting to x.dtype would quantize the selected regularizer on
+        # bf16/fp16 designs — a different model than CV selected
+        lam_dtype = resolve_precision(self.precision).fit_dtype(x.dtype)
         theta = solvers.solve_cholesky(hess, grad,
-                                       jnp.asarray(result.best_lam, x.dtype))
+                                       jnp.asarray(result.best_lam, lam_dtype))
         return theta, result

@@ -19,8 +19,8 @@ from repro.models.params import Spec
 
 __all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
            "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
-           "pad_to_multiple", "chunk_lams", "cv_state_specs",
-           "cv_chunk_in_specs", "StageRing"]
+           "pad_to_multiple", "chunk_lams", "auto_lam_chunk",
+           "cv_state_specs", "cv_chunk_in_specs", "StageRing"]
 
 
 def spec_pspec(spec: Spec, ctx) -> P:
@@ -162,6 +162,21 @@ def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, mode="edge"), n
+
+
+def auto_lam_chunk(h: int, block: int, dtype, budget: int) -> int:
+    """λ-chunk size whose per-chunk packed working set fits ``budget`` bytes.
+
+    One definition shared by the engine's ``lam_chunk='auto'`` heuristic
+    and the benches, so "the chunk that fits one VMEM" cannot drift.
+    ``dtype`` is the *storage* dtype of the streamed interpolant rows
+    (:meth:`~repro.core.precision.PrecisionPolicy.store_dtype`) — halving
+    the itemsize (bf16) doubles the chunk at the same budget, which is the
+    memory half of the mixed-precision contract.
+    """
+    from repro.core import packing   # local: distributed ↔ core layering
+    per_lam = packing.packed_nbytes(h, block, dtype)
+    return max(1, int(budget // per_lam))
 
 
 def chunk_lams(lams: jax.Array, chunk: int):

@@ -59,43 +59,61 @@ def _inv_lower(l: jax.Array) -> jax.Array:
     return jax.lax.fori_loop(0, b, body, jnp.zeros_like(l))
 
 
-def _panel_kernel(panel_ref, out_ref, inv_ref):
-    i = pl.program_id(0)
+def _make_panel_kernel(compute_dtype=None):
+    def kernel(panel_ref, out_ref, inv_ref):
+        i = pl.program_id(0)
 
-    @pl.when(i == 0)
-    def _diag():
-        l11 = _potf2(panel_ref[...])
-        inv_ref[...] = _inv_lower(l11)
-        out_ref[...] = l11
+        @pl.when(i == 0)
+        def _diag():
+            # potf2 + inversion always run at the panel (accumulation)
+            # dtype — the sequential recurrences are the unstable half
+            l11 = _potf2(panel_ref[...])
+            inv_ref[...] = _inv_lower(l11)
+            out_ref[...] = l11
 
-    @pl.when(i > 0)
-    def _sub():
-        # trsm recast as GEMM against the cached inverse: A·(L⁻¹)ᵀ
-        out_ref[...] = jnp.dot(
-            panel_ref[...], inv_ref[...].T, preferred_element_type=out_ref.dtype
-        )
+        @pl.when(i > 0)
+        def _sub():
+            # trsm recast as GEMM against the cached inverse: A·(L⁻¹)ᵀ —
+            # MXU operands at the compute dtype, fp32+ accumulation
+            panel = panel_ref[...]
+            inv_t = inv_ref[...].T
+            if compute_dtype is not None:
+                panel = panel.astype(compute_dtype)
+                inv_t = inv_t.astype(compute_dtype)
+            out_ref[...] = jnp.dot(panel, inv_t,
+                                   preferred_element_type=out_ref.dtype)
 
-
-def _syrk_kernel(panel_i_ref, panel_j_ref, c_ref, out_ref):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(i >= j)
-    def _update():
-        out_ref[...] = c_ref[...] - jnp.dot(
-            panel_i_ref[...], panel_j_ref[...].T, preferred_element_type=out_ref.dtype
-        )
-
-    @pl.when(i < j)
-    def _copy():
-        out_ref[...] = c_ref[...]
+    return kernel
 
 
-def _factor_panel(panel: jax.Array, block: int, interpret: bool) -> jax.Array:
+def _make_syrk_kernel(compute_dtype=None):
+    def kernel(panel_i_ref, panel_j_ref, c_ref, out_ref):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(i >= j)
+        def _update():
+            pi = panel_i_ref[...]
+            pj_t = panel_j_ref[...].T
+            if compute_dtype is not None:
+                pi = pi.astype(compute_dtype)
+                pj_t = pj_t.astype(compute_dtype)
+            out_ref[...] = c_ref[...] - jnp.dot(
+                pi, pj_t, preferred_element_type=out_ref.dtype)
+
+        @pl.when(i < j)
+        def _copy():
+            out_ref[...] = c_ref[...]
+
+    return kernel
+
+
+def _factor_panel(panel: jax.Array, block: int, interpret: bool,
+                  compute_dtype=None) -> jax.Array:
     m = panel.shape[0]
     nt = m // block
     return pl.pallas_call(
-        _panel_kernel,
+        _make_panel_kernel(compute_dtype),
         grid=(nt,),
         in_specs=[pl.BlockSpec((block, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block, block), lambda i: (i, 0)),
@@ -106,11 +124,11 @@ def _factor_panel(panel: jax.Array, block: int, interpret: bool) -> jax.Array:
 
 
 def _syrk_update(trailing: jax.Array, panel: jax.Array, block: int,
-                 interpret: bool) -> jax.Array:
+                 interpret: bool, compute_dtype=None) -> jax.Array:
     m = trailing.shape[0]
     nt = m // block
     return pl.pallas_call(
-        _syrk_kernel,
+        _make_syrk_kernel(compute_dtype),
         grid=(nt, nt),
         in_specs=[
             pl.BlockSpec((block, block), lambda i, j: (i, 0)),
@@ -123,12 +141,26 @@ def _syrk_update(trailing: jax.Array, panel: jax.Array, block: int,
     )(panel, panel, trailing)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret",
+                                             "compute_dtype", "accum_dtype"))
 def cholesky_blocked(a: jax.Array, block: int = 256, *,
-                     interpret: bool | None = None) -> jax.Array:
-    """Cholesky factor of SPD ``a`` (h×h) -> lower-triangular L (h×h)."""
+                     interpret: bool | None = None,
+                     compute_dtype=None, accum_dtype=None) -> jax.Array:
+    """Cholesky factor of SPD ``a`` (h×h) -> lower-triangular L (h×h).
+
+    Mixed precision: the factorization state (panels, trailing matrix, the
+    returned L) lives at ``accum_dtype`` — a 16-bit input is promoted, the
+    potf2 recurrence never runs in bf16 — while ``compute_dtype`` (when
+    given) feeds the syrk/trsm GEMM operands to the MXU at reduced
+    precision with full-precision accumulation.  Defaults inherit
+    ``a.dtype`` (bit-compatible with the pre-policy kernel).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    from .packed_trsm import _resolve_dtypes
+    cd, ad = _resolve_dtypes(a.dtype, compute_dtype, accum_dtype)
+    a = a.astype(ad)
+    cd_gemm = None if cd == ad else cd
     h = a.shape[-1]
     nt = -(-h // block)
     hp = nt * block
@@ -141,12 +173,12 @@ def cholesky_blocked(a: jax.Array, block: int = 256, *,
     for j in range(nt):
         lo = j * block
         panel = jax.lax.dynamic_slice(out, (lo, lo), (hp - lo, block))
-        panel = _factor_panel(panel, block, interpret)
+        panel = _factor_panel(panel, block, interpret, cd_gemm)
         out = jax.lax.dynamic_update_slice(out, panel, (lo, lo))
         if j + 1 < nt:
             sub = jax.lax.dynamic_slice(panel, (block, 0), (hp - lo - block, block))
             trailing = jax.lax.dynamic_slice(
                 out, (lo + block, lo + block), (hp - lo - block, hp - lo - block))
-            trailing = _syrk_update(trailing, sub, block, interpret)
+            trailing = _syrk_update(trailing, sub, block, interpret, cd_gemm)
             out = jax.lax.dynamic_update_slice(out, trailing, (lo + block, lo + block))
     return jnp.tril(out[:h, :h])

@@ -14,6 +14,15 @@ scalar-prefetched (s, u) → packed-index map; already-solved rows come from
 the revisited output ref).  Diagonal tiles are pre-inverted once outside the
 kernel (shared by both sweeps: ``inv(L_jj)ᵀ = inv(L_jjᵀ)``) so every inner
 step is one ``B×B @ B×q`` MXU GEMM.
+
+Mixed precision (:mod:`repro.core.precision`): ``compute_dtype`` is what the
+MXU GEMM operands are cast to (bf16 halves the streamed tile traffic),
+``accum_dtype`` is what the GEMMs accumulate in and the solution/output ref
+live in — fp32 whenever compute is 16-bit, so the substitution recurrence
+never accumulates rounding in bf16.  Diagonal tiles are inverted at the
+accumulation dtype (inverting a bf16-rounded triangle is the unstable half
+of the tradeoff), then cast down for the MXU.  Defaults (``None``) inherit
+the factor's dtype — bit-compatible with the pre-policy kernel.
 """
 from __future__ import annotations
 
@@ -52,17 +61,20 @@ def _make_kernel(block: int, nt: int, reverse: bool):
 
         @pl.when(contrib)
         def _accumulate():
+            # MXU operands at the compute dtype (the tile already is), the
+            # accumulation at the scratch/accum dtype
             w_t = out_ref[pl.ds(t * block, block), :]
             tile = tiles_ref[0].T if reverse else tiles_ref[0]
-            acc_ref[...] += jnp.dot(tile, w_t,
+            acc_ref[...] += jnp.dot(tile, w_t.astype(tile.dtype),
                                     preferred_element_type=acc_ref.dtype)
 
         @pl.when(t == i)
         def _solve():
             g_i = g_ref[pl.ds(i * block, block), :]
             inv = inv_ref[0].T if reverse else inv_ref[0]
+            rhs = (g_i - acc_ref[...]).astype(inv.dtype)
             out_ref[pl.ds(i * block, block), :] = jnp.dot(
-                inv, g_i - acc_ref[...], preferred_element_type=out_ref.dtype)
+                inv, rhs, preferred_element_type=out_ref.dtype)
 
     return kernel
 
@@ -84,33 +96,56 @@ def _step_tile_indices(h: int, block: int, reverse: bool) -> np.ndarray:
     return idx
 
 
-def _inv_diag_tiles(vec: jax.Array, h: int, block: int) -> jax.Array:
-    """(nt, B, B) pre-inverted diagonal tiles (identity-padded tail)."""
+def _resolve_dtypes(ref_dtype, compute_dtype, accum_dtype):
+    """(compute, accum) dtype pair: inherit by default, never accumulate in
+    a 16-bit type — the one rule shared by every packed kernel (the rule
+    itself lives in :func:`repro.core.precision.default_accum_dtype`)."""
+    from repro.core.precision import default_accum_dtype
+
+    cd = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else jnp.dtype(ref_dtype)
+    ad = (jnp.dtype(accum_dtype) if accum_dtype is not None
+          else default_accum_dtype(cd))
+    return cd, ad
+
+
+def _inv_diag_tiles(vec: jax.Array, h: int, block: int,
+                    accum_dtype=None) -> jax.Array:
+    """(nt, B, B) pre-inverted diagonal tiles (identity-padded tail),
+    inverted at ``accum_dtype`` for stability."""
     tiles = vec.reshape(-1, block, block)
-    return packing.invert_diag_tiles(packing._diag_tiles(tiles, h, block))
+    diag = packing._diag_tiles(tiles, h, block)
+    if accum_dtype is not None:
+        diag = diag.astype(accum_dtype)
+    return packing.invert_diag_tiles(diag)
 
 
 @functools.partial(jax.jit, static_argnames=("h", "block", "transpose",
-                                             "interpret"))
+                                             "interpret", "compute_dtype",
+                                             "accum_dtype"))
 def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int = 128,
                        *, transpose: bool = False,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       compute_dtype=None, accum_dtype=None) -> jax.Array:
     """Solve L w = g (or Lᵀ w = g) from the packed factor ``vec`` (P,).
 
     ``g``: (h,) or (h, q).  Matches :func:`repro.core.packing.solve_lower_packed`.
+    ``compute_dtype`` / ``accum_dtype``: see module doc — defaults inherit
+    ``vec.dtype``; the solution comes back in the accumulation dtype.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    cd, ad = _resolve_dtypes(vec.dtype, compute_dtype, accum_dtype)
     nt = packing.num_tiles(h, block)
     hp = nt * block
     squeeze = g.ndim == 1
-    g2 = (g[:, None] if squeeze else g).astype(vec.dtype)
+    g2 = (g[:, None] if squeeze else g).astype(ad)
     q = g2.shape[1]
     if hp != h:
         g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
 
-    tiles = vec.reshape(-1, block, block)
-    inv_diag = _inv_diag_tiles(vec, h, block)
+    tiles = vec.astype(cd).reshape(-1, block, block)
+    inv_diag = _inv_diag_tiles(vec, h, block, accum_dtype=ad).astype(cd)
     idx = jnp.asarray(_step_tile_indices(h, block, transpose))
 
     def inv_index(s, u, idx):
@@ -139,9 +174,12 @@ def solve_lower_packed(vec: jax.Array, g: jax.Array, h: int, block: int = 128,
 
 
 def solve_packed(vec: jax.Array, g: jax.Array, h: int, block: int = 128, *,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None,
+                 compute_dtype=None, accum_dtype=None) -> jax.Array:
     """L Lᵀ θ = g entirely in the packed domain (forward + back sweep)."""
     w = solve_lower_packed(vec, g, h, block, transpose=False,
-                           interpret=interpret)
+                           interpret=interpret, compute_dtype=compute_dtype,
+                           accum_dtype=accum_dtype)
     return solve_lower_packed(vec, w, h, block, transpose=True,
-                              interpret=interpret)
+                              interpret=interpret, compute_dtype=compute_dtype,
+                              accum_dtype=accum_dtype)

@@ -20,6 +20,14 @@ Two fusions live here:
   footprint per λ is one coefficient tile stack ((r+1)·B²) + the (h,)
   solution, which is what makes the chunked λ sweep O(chunk · h) instead
   of O(q · h²).
+
+Mixed precision (:mod:`repro.core.precision`): Θ may arrive stored in bf16;
+``compute_dtype`` sets the Horner/GEMM operand dtype (default: Θ's own),
+``accum_dtype`` the GEMM accumulation + solution dtype (fp32 on 16-bit
+compute).  Diagonal tiles are Horner-evaluated and inverted at the
+accumulation dtype before being cast down for the MXU.  ``rhs_per_lam=True``
+accepts a per-λ right-hand side (q, h[, m]) — the refinement sweep's
+residuals — reusing the kernel's batched-RHS back-substitution path.
 """
 from __future__ import annotations
 
@@ -119,13 +127,15 @@ def _make_solve_kernel(degree: int, block: int, nt: int, reverse: bool,
 
         @pl.when(contrib)
         def _accumulate():
-            x = lam_ref[c]
+            # Horner at the coefficient (compute) dtype: λ is quantized to
+            # it per step, the GEMM accumulates at the scratch dtype
+            x = lam_ref[c].astype(theta_ref.dtype)
             tile = theta_ref[degree, 0]
             for k in range(degree - 1, -1, -1):  # Horner, in registers
                 tile = tile * x + theta_ref[k, 0]
             tile = tile.T if reverse else tile
             w_t = out_ref[0, pl.ds(t * block, block), :]
-            acc_ref[...] += jnp.dot(tile, w_t,
+            acc_ref[...] += jnp.dot(tile, w_t.astype(tile.dtype),
                                     preferred_element_type=acc_ref.dtype)
 
         @pl.when(t == i)
@@ -135,8 +145,9 @@ def _make_solve_kernel(degree: int, block: int, nt: int, reverse: bool,
             else:
                 g_i = g_ref[pl.ds(i * block, block), :]
             inv = inv_ref[0, 0].T if reverse else inv_ref[0, 0]
+            rhs = (g_i - acc_ref[...]).astype(inv.dtype)
             out_ref[0, pl.ds(i * block, block), :] = jnp.dot(
-                inv, g_i - acc_ref[...], preferred_element_type=out_ref.dtype)
+                inv, rhs, preferred_element_type=out_ref.dtype)
 
     return kernel
 
@@ -189,42 +200,59 @@ def _interp_sweep(theta_t: jax.Array, x: jax.Array, inv_diag: jax.Array,
     )(idx, x, inv_diag, g, theta_t)
 
 
-@functools.partial(jax.jit, static_argnames=("h", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("h", "block", "interpret",
+                                             "rhs_per_lam", "compute_dtype",
+                                             "accum_dtype"))
 def interp_solve(theta: jax.Array, lams: jax.Array, g: jax.Array, h: int,
                  block: int = 128, *, center: jax.Array | float = 0.0,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None, rhs_per_lam: bool = False,
+                 compute_dtype=None, accum_dtype=None) -> jax.Array:
     """Solve L(λ) L(λ)ᵀ θ = g at every λ without materializing any L(λ).
 
     ``theta``: (r+1, P) packed interpolant coefficients; ``lams``: (q,);
-    ``g``: (h,) or (h, m) shared RHS.  Returns (q, h) (or (q, h, m)).  The
-    interpolated factor exists only tile-by-tile in registers: the only
-    O(h²) buffer in the whole sweep is Θ itself, which is q-independent.
+    ``g``: (h,) or (h, m) shared RHS — or, with ``rhs_per_lam=True``, a
+    per-λ RHS (q, h) / (q, h, m) (the refinement residuals).  Returns
+    (q, h) (or (q, h, m)) in the accumulation dtype.  The interpolated
+    factor exists only tile-by-tile in registers: the only O(h²) buffer in
+    the whole sweep is Θ itself, which is q-independent — and stays at its
+    storage dtype.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    from .packed_trsm import _resolve_dtypes
+    cd, ad = _resolve_dtypes(theta.dtype, compute_dtype, accum_dtype)
     degree = theta.shape[0] - 1
     nt = packing.num_tiles(h, block)
     hp = nt * block
-    squeeze = g.ndim == 1
-    g2 = (g[:, None] if squeeze else g).astype(theta.dtype)
-    if hp != h:
-        g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
+    if rhs_per_lam:
+        squeeze = g.ndim == 2                      # (q, h) -> (q, h, 1)
+        g2 = (g[..., None] if squeeze else g).astype(ad)
+        if hp != h:
+            g2 = jnp.pad(g2, ((0, 0), (0, hp - h), (0, 0)))
+    else:
+        squeeze = g.ndim == 1
+        g2 = (g[:, None] if squeeze else g).astype(ad)
+        if hp != h:
+            g2 = jnp.pad(g2, ((0, hp - h), (0, 0)))
 
-    x = (lams.astype(theta.dtype) - jnp.asarray(center, theta.dtype))
-    theta_t = theta.reshape(degree + 1, -1, block, block)
+    x = (lams.astype(ad) - jnp.asarray(center, ad))
+    theta_t = theta.astype(cd).reshape(degree + 1, -1, block, block)
 
     # Diagonal tiles are the only place substitution needs an inverse, so
     # they alone are interpolated ahead of the sweep: (q, nt, B, B) — O(q·h·B)
     # not O(q·h²) — then pre-inverted (identity-padded tail, shared by both
-    # sweeps via transposition).
-    diag_coeff = theta_t[:, packing.column_starts(h, block)]   # (r+1, nt, B, B)
+    # sweeps via transposition).  Horner + inversion run at the accumulation
+    # dtype (inverting bf16-rounded triangles in bf16 is the unstable half),
+    # the inverses feed the MXU at the compute dtype.
+    diag_coeff = theta.reshape(degree + 1, -1, block, block
+                               )[:, packing.column_starts(h, block)].astype(ad)
     diag = diag_coeff[degree]
     for k in range(degree - 1, -1, -1):
         diag = diag * x[:, None, None, None] + diag_coeff[k]
     tail = packing._identity_tail(h, block)
     if tail.any():
         diag = diag.at[:, nt - 1].add(jnp.asarray(tail, diag.dtype))
-    inv_diag = packing.invert_diag_tiles(diag)
+    inv_diag = packing.invert_diag_tiles(diag).astype(cd)
 
     w = _interp_sweep(theta_t, x, inv_diag, g2, h, block, False, interpret)
     out = _interp_sweep(theta_t, x, inv_diag, w, h, block, True, interpret)

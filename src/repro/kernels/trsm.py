@@ -21,7 +21,8 @@ from jax.experimental import pallas as pl
 __all__ = ["solve_lower_blocked", "solve_factor_sweep"]
 
 
-def _make_solve_kernel(block: int, nt: int, reverse: bool):
+def _make_solve_kernel(block: int, nt: int, reverse: bool,
+                       compute_dtype=None):
     def kernel(panel_ref, inv_ref, g_ref, w_ref):
         step = pl.program_id(0)
 
@@ -38,26 +39,45 @@ def _make_solve_kernel(block: int, nt: int, reverse: bool):
             mask = col < i * block          # columns already solved (below)
         panel = jnp.where(mask, panel_ref[...], 0.0)
         w = w_ref[...]
-        s = jnp.dot(panel, w, preferred_element_type=w.dtype)
+        if compute_dtype is not None:       # MXU at reduced precision,
+            panel = panel.astype(compute_dtype)   # full-precision accum
+            w = w.astype(compute_dtype)
+        s = jnp.dot(panel, w, preferred_element_type=w_ref.dtype)
         g_i = g_ref[pl.ds(i * block, block), :]
-        w_i = jnp.dot(inv_ref[0], g_i - s, preferred_element_type=w.dtype)
+        rhs = g_i - s
+        inv = inv_ref[0]
+        if compute_dtype is not None:
+            rhs = rhs.astype(compute_dtype)
+            inv = inv.astype(compute_dtype)
+        w_i = jnp.dot(inv, rhs, preferred_element_type=w_ref.dtype)
         w_ref[pl.ds(i * block, block), :] = w_i
 
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("transpose", "interpret", "block"))
+@functools.partial(jax.jit, static_argnames=("transpose", "interpret", "block",
+                                             "compute_dtype", "accum_dtype"))
 def solve_lower_blocked(l: jax.Array, g: jax.Array, block: int = 256, *,
                         transpose: bool = False,
-                        interpret: bool | None = None) -> jax.Array:
-    """Solve L w = g (or Lᵀ w = g) for lower-triangular L.  g: (h,) or (h, q)."""
+                        interpret: bool | None = None,
+                        compute_dtype=None, accum_dtype=None) -> jax.Array:
+    """Solve L w = g (or Lᵀ w = g) for lower-triangular L.  g: (h,) or (h, q).
+
+    ``compute_dtype``/``accum_dtype``: MXU operand vs accumulation dtype —
+    the factor state, diagonal inversion, and solution live at the
+    accumulation dtype (defaults inherit ``l.dtype``).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    from .packed_trsm import _resolve_dtypes
+    cd, ad = _resolve_dtypes(l.dtype, compute_dtype, accum_dtype)
+    cd_gemm = None if cd == ad else cd
+    l = l.astype(ad)
     h = l.shape[-1]
     nt = -(-h // block)
     hp = nt * block
     squeeze = g.ndim == 1
-    g2 = (g[:, None] if squeeze else g).astype(l.dtype)
+    g2 = (g[:, None] if squeeze else g).astype(ad)
     q = g2.shape[1]
     if hp != h:
         l = jnp.pad(l, ((0, hp - h), (0, hp - h)))
@@ -73,7 +93,8 @@ def solve_lower_blocked(l: jax.Array, g: jax.Array, block: int = 256, *,
         diag, jnp.broadcast_to(eye, diag.shape), left_side=True,
         lower=not transpose, transpose_a=False)
 
-    kernel = _make_solve_kernel(block, nt, reverse=transpose)
+    kernel = _make_solve_kernel(block, nt, reverse=transpose,
+                                compute_dtype=cd_gemm)
 
     def row_index(step, *_):
         return ((nt - 1 - step) if transpose else step, 0)

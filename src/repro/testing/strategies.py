@@ -18,6 +18,13 @@ Works with both real hypothesis and the deterministic in-repo fallback
 (:mod:`repro.testing.hypothesis_fallback`): only the shared strategy
 surface is used (``integers`` / ``sampled_from`` / ``floats`` /
 ``booleans`` / ``just`` / ``.map``).
+
+Precision matrix: ``REPRO_TEST_PRECISION`` (a
+:mod:`repro.core.precision` preset name) re-runs these suites under a
+mixed-precision policy — the engines and :func:`make_backend` pick it up
+through ``resolve_precision(None)``, and the cross-path numeric asserts
+widen through :func:`parity_tol` / :func:`argmin_slack` (native runs keep
+their original tight tolerances bit-for-bit).
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ __all__ = [
     "spd_matrix", "regression_folds", "make_backend", "log_grid",
     "backend_names", "grid_sizes", "lam_chunks", "heights", "blocks",
     "packed_shapes", "DEFAULT_GRID_RANGE", "PACKED_SHAPES",
+    "active_precision", "parity_tol", "argmin_slack",
 ]
 
 #: (h, block) pairs where h is NOT a tile multiple, incl. h < block — the
@@ -76,11 +84,72 @@ def regression_folds(h: int = 32, n: int = 256, k: int = 4, seed: int = 1,
 
 def make_backend(name: str, block: int = 8):
     """Backend under test: ``'reference'`` or ``'pallas'`` (interpret mode
-    off-TPU) with proportionate kernel tiles for small test problems."""
+    off-TPU) with proportionate kernel tiles for small test problems.
+    Carries the active precision policy (``REPRO_TEST_PRECISION``)."""
     from repro.core.backends import PallasBackend, ReferenceBackend
 
-    return (ReferenceBackend() if name == "reference"
-            else PallasBackend(chol_block=block, trsm_block=block))
+    pol = active_precision()
+    return (ReferenceBackend(precision=pol) if name == "reference"
+            else PallasBackend(chol_block=block, trsm_block=block,
+                               precision=pol))
+
+
+# ------------------------------------------------------- precision matrix
+
+
+def active_precision():
+    """The policy the suite is running under — ``native`` unless the
+    ``REPRO_TEST_PRECISION`` dtype-matrix hook says otherwise."""
+    from repro.core.precision import resolve_precision
+
+    return resolve_precision(None)
+
+
+def parity_tol(rtol: float = 1e-9, atol: float = 1e-12) -> dict:
+    """Tolerances for asserts that compare *independently computed* paths
+    (split vs fused jit, packed vs dense oracle, warm vs fresh cold).
+
+    Native runs keep the call site's original tight tolerances; under the
+    dtype matrix they widen to the active policy's rounding scale —
+    refinement narrows solve error but not the last-ulp fusion freedom.
+    """
+    pol = active_precision()
+    if pol.store == "bfloat16" or pol.compute == "bfloat16":
+        return dict(rtol=5e-2, atol=1e-2)
+    if pol.store == "float32" or pol.compute == "float32":
+        return dict(rtol=3e-4, atol=1e-5)
+    return dict(rtol=rtol, atol=atol)
+
+
+def argmin_slack() -> int:
+    """Grid steps two independently computed hold-out curves may disagree
+    on the argmin: 0 under native (bit-level ties break identically), 1
+    under a reduced-precision policy (near-ties can flip)."""
+    return 0 if active_precision().is_native else 1
+
+
+def assert_selection_close(errors_a, errors_b):
+    """Two independently computed hold-out curves select equivalent λ.
+
+    Native: the argmin index must match exactly (bit-level ties break
+    identically).  Under a reduced-precision policy the curve can plateau
+    at the rounding scale — the argmin index may wander arbitrarily far
+    along the plateau — so the plateau-safe contract is *selection
+    quality*: each curve's chosen index must be within policy rounding of
+    the other curve's minimum.
+    """
+    import numpy as np
+
+    a, b = np.asarray(errors_a), np.asarray(errors_b)
+    ia, ib = int(np.argmin(a)), int(np.argmin(b))
+    if active_precision().is_native:
+        assert ia == ib, (ia, ib)
+        return
+    tol = parity_tol()
+    for curve, pick in ((a, ib), (b, ia)):
+        lo = float(curve.min())
+        assert curve[pick] <= lo + tol["atol"] + tol["rtol"] * abs(lo), \
+            (ia, ib, float(curve[pick]), lo)
 
 
 def log_grid(q: int, lo: float = DEFAULT_GRID_RANGE[0],

@@ -55,3 +55,61 @@ def test_remainder_r_positive_and_monotone_interval():
     assert r_small > 0
     # larger interval -> max over superset -> at least as large
     assert r_big >= r_small - 1e-12
+
+
+# ------------------------------------------------- reduced-precision storage
+
+
+def _observed_worst(model, a, lam_c, gamma, big_d):
+    """max_λ ‖L_I(λ) − L(λ)‖_F / √D over the Thm 4.7 interval."""
+    d = a.shape[0]
+    worst = 0.0
+    for lam in np.linspace(lam_c - gamma, lam_c + gamma, 9):
+        l_i = np.asarray(model.eval_factor(jnp.asarray(lam)), np.float64)
+        l_e = jnp.linalg.cholesky(a + lam * jnp.eye(d))
+        worst = max(worst, float(np.linalg.norm(l_i - l_e)) / np.sqrt(big_d))
+    return worst
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bound_degrades_as_predicted_under_reduced_precision(seed):
+    """Property (mixed-precision satellite): the Thm 4.4/4.7 bound still
+    dominates the observed interpolation error when Θ is stored at fp32,
+    and under bf16 storage the error grows by at most the storage
+    quantization term — degradation as *predicted* (bound + ε·‖Θ‖ Horner
+    envelope), never a violation beyond it.  The quantization envelope is
+    the triangle inequality over the Horner evaluation: rounding every
+    coefficient tile and λ offset to a dtype with unit roundoff ε perturbs
+    each packed entry by ≤ ~2ε·Σ_k |Θ_k||λ|^k."""
+    from repro.core.precision import tree_astype
+
+    d = 8
+    a = _spd(d, seed)
+    lam_c, w, gamma = 0.6, 0.15, 0.15
+    sample = jnp.linspace(lam_c - w, lam_c + w, 5)
+    model = picholesky.fit(a, sample, 2, block=4)
+    big_d = d * (d + 1) / 2.0
+    rhs = float(bound.picholesky_bound(a, sample, lam_c, gamma))
+
+    worst = {"f64": _observed_worst(model, a, lam_c, gamma, big_d)}
+    for tag, dt in (("fp32", jnp.float32), ("bf16", jnp.bfloat16)):
+        worst[tag] = _observed_worst(tree_astype(model, dt), a, lam_c,
+                                     gamma, big_d)
+
+    # quantization envelope per storage dtype: 2ε · Σ_k ‖Θ_k‖_F · max|λ−c|^k
+    lam_max = float(lam_c + gamma)
+    theta = np.asarray(model.theta, np.float64)
+    envelope = sum(np.linalg.norm(theta[k]) * lam_max ** k
+                   for k in range(theta.shape[0])) / np.sqrt(big_d)
+    eps = {"fp32": 2.0 ** -24, "bf16": 2.0 ** -8}
+
+    assert worst["f64"] <= rhs * 1.01
+    # fp32 storage: quantization is far below the analytic remainder — the
+    # bound must still dominate outright
+    assert worst["fp32"] <= rhs * 1.01 + 2 * eps["fp32"] * envelope
+    assert worst["fp32"] <= rhs * 1.05
+    # bf16 storage: error grows (reduced precision is not free)...
+    assert worst["bf16"] >= worst["fp32"] - 1e-12
+    # ...but stays within bound + the predicted quantization envelope
+    assert worst["bf16"] <= rhs * 1.01 + 2 * eps["bf16"] * envelope, \
+        (worst, rhs, envelope)

@@ -63,10 +63,10 @@ def test_solve_packed_matches_dense_solve(backend, h, block):
     pf = packing.PackedFactor.from_dense(l, block)
     dense = ReferenceBackend().solve_from_factor(l, g)
     np.testing.assert_allclose(solvers.solve_packed(pf, g, backend=bk),
-                               dense, rtol=1e-8, atol=1e-10)
+                               dense, **props.parity_tol(1e-8, 1e-10))
     # the dispatch path: solve_from_factor on a PackedFactor never unpacks
     np.testing.assert_allclose(solvers.solve_from_factor(pf, g, backend=bk),
-                               dense, rtol=1e-8, atol=1e-10)
+                               dense, **props.parity_tol(1e-8, 1e-10))
 
 
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
@@ -81,7 +81,7 @@ def test_solve_packed_batched_factors(backend):
                               block=block)
     out = solvers.solve_packed(pf, g, backend=bk)
     exp = jax.vmap(lambda l: ReferenceBackend().solve_from_factor(l, g))(ls)
-    np.testing.assert_allclose(out, exp, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(out, exp, **props.parity_tol(1e-8, 1e-10))
 
 
 @given(h=props.heights(), block=props.blocks(), transpose=st.booleans())
@@ -113,7 +113,7 @@ def test_interp_solve_matches_dense_route(backend, h, block):
     out = solvers.solve_interpolant_sweep(model, lams, g, backend=bk)
     dense = model.eval_factor(lams)   # debug escape hatch
     exp = jax.vmap(lambda l: ReferenceBackend().solve_from_factor(l, g))(dense)
-    np.testing.assert_allclose(out, exp, rtol=1e-7, atol=1e-9)
+    np.testing.assert_allclose(out, exp, **props.parity_tol(1e-7, 1e-9))
 
 
 def test_eval_factor_is_debug_escape_hatch():
@@ -183,7 +183,8 @@ def test_eval_factor_non_tile_multiple_vs_dense_fit():
     v = picholesky.vandermonde(sample, 2)
     theta = jnp.linalg.solve(v.T @ v, v.T @ ls.reshape(5, -1))
     expect = (picholesky.vandermonde(lams, 2) @ theta).reshape(4, h, h)
-    np.testing.assert_allclose(dense, jnp.tril(expect), rtol=1e-7, atol=1e-9)
+    np.testing.assert_allclose(dense, jnp.tril(expect),
+                               **props.parity_tol(1e-7, 1e-9))
 
 
 def test_packed_factor_vec_size_validated():
@@ -210,8 +211,9 @@ def test_chunked_sweep_matches_unchunked(folds4, chunk):
     strat = lambda: engine.PiCholeskyStrategy(g=4, block=16)  # noqa: E731
     base = engine.CVEngine(strat(), lam_chunk=None).run(folds4, LAMS)
     r = engine.CVEngine(strat(), lam_chunk=chunk).run(folds4, LAMS)
-    np.testing.assert_allclose(r.errors, base.errors, rtol=1e-10, atol=1e-12)
-    assert r.best_lam == pytest.approx(base.best_lam, rel=1e-10)
+    np.testing.assert_allclose(r.errors, base.errors,
+                               **props.parity_tol(1e-10, 1e-12))
+    props.assert_selection_close(r.errors, base.errors)
     assert r.extras["engine"]["lam_chunk"] == chunk
 
 
@@ -227,7 +229,8 @@ def test_chunking_is_strategy_agnostic(folds4, name, params):
                            lam_chunk=None).run(folds4, LAMS)
     r = engine.CVEngine(engine.make_strategy(name, **params),
                         lam_chunk=7).run(folds4, LAMS)
-    np.testing.assert_allclose(r.errors, base.errors, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(r.errors, base.errors,
+                               **props.parity_tol(1e-10, 1e-12))
 
 
 def test_chunked_sweep_on_mesh(folds4):
@@ -237,7 +240,8 @@ def test_chunked_sweep_on_mesh(folds4):
     base = engine.CVEngine(strat(), lam_chunk=None).run(folds4, LAMS)
     r = engine.CVEngine(strat(), mesh="auto", lam_chunk=3).run(folds4, LAMS)
     assert r.extras["engine"]["mesh"] is not None
-    np.testing.assert_allclose(r.errors, base.errors, rtol=1e-8)
+    np.testing.assert_allclose(r.errors, base.errors,
+                               **props.parity_tol(1e-8, 1e-12))
 
 
 def test_chunk_lams_helper():
@@ -253,7 +257,10 @@ def test_chunk_lams_helper():
 
 def test_auto_chunk_sized_to_vmem_budget():
     eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4, block=16))
-    per_lam = packing.packed_size(64, 16) * 8
+    # the auto chunk budgets at the policy's STORAGE dtype: bf16 storage
+    # halves the per-λ bytes and doubles the chunk
+    store = props.active_precision().store_dtype(jnp.float64)
+    per_lam = packing.packed_nbytes(64, 16, store)
     assert eng._resolve_chunk(1024, 64, jnp.float64) == \
         engine.LAM_CHUNK_BUDGET_BYTES // per_lam
     assert engine.CVEngine("exact", lam_chunk=None)._resolve_chunk(

@@ -1,0 +1,370 @@
+"""Mixed-precision factor pipeline: one PrecisionPolicy from the Pallas
+kernels to the CV engine.
+
+The acceptance contract lives here:
+
+* ``bf16_store`` halves ``PackedFactor`` bytes and cached-entry bytes
+  (``FactorCache.stats['bytes_saved']`` reports the saving),
+* ``bf16_refined`` reproduces the fp32 hold-out **argmin bit-for-bit** on
+  the Table-4 regression grid, on both backends — the chunk-granular fp32
+  residual refinement is what buys the accuracy back,
+* the policy is part of the cache fingerprint: a bf16 entry can never
+  silently serve an fp32 request,
+* the VMEM-auto λ chunk doubles under bf16 storage,
+* λ never quantizes to a reduced-precision data dtype (fit-dtype floor).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, factor_cache, packing, picholesky
+from repro.core.backends import (CountingBackend, PallasBackend,
+                                 ReferenceBackend, resolve_backend)
+from repro.core.precision import (PRESETS, PrecisionPolicy,
+                                  resolve_precision, tree_astype)
+from repro.testing import strategies as props
+
+LAMS = props.log_grid(31)
+
+
+def _bk(name, policy, block=16):
+    return props.make_backend(name, block=block).with_precision(
+        resolve_precision(policy))
+
+
+# ------------------------------------------------------------ policy object
+
+
+def test_presets_resolution_and_errors():
+    assert resolve_precision("fp32") is PRESETS["fp32"]
+    assert resolve_precision(PRESETS["bf16_store"]) is PRESETS["bf16_store"]
+    assert resolve_precision("native").is_native
+    with pytest.raises(ValueError, match="unknown precision"):
+        resolve_precision("fp8_dreams")
+    with pytest.raises(ValueError, match="refine_iters"):
+        PrecisionPolicy(refine_iters=-1)
+    with pytest.raises(TypeError):
+        PrecisionPolicy(store="not_a_dtype")
+
+
+def test_dtype_role_resolution():
+    nat = PRESETS["native"]
+    assert nat.store_dtype(jnp.float64) == jnp.float64
+    assert nat.compute_dtype(jnp.float32) == jnp.float32
+    # accum never 16-bit: native policy on a bf16 input promotes to fp32
+    assert nat.accum_dtype(jnp.bfloat16) == jnp.float32
+    # fit floors at fp32 (the λ grid must not quantize), inherits above it
+    assert nat.fit_dtype(jnp.bfloat16) == jnp.float32
+    assert nat.fit_dtype(jnp.float64) == jnp.float64
+
+    bf = PRESETS["bf16_refined"]
+    assert bf.store_dtype(jnp.float64) == jnp.bfloat16
+    assert bf.accum_dtype(jnp.float64) == jnp.float32
+    assert bf.fit_dtype(jnp.float64) == jnp.float32
+    assert bf.refine_iters == 1
+    assert bf.bytes_ratio(jnp.float32) == 2.0
+
+
+def test_descriptor_is_content_derived():
+    """Fingerprints come from the dtype roles, not the preset name — and
+    the store/refine roles both separate policies."""
+    assert PRESETS["native"].descriptor() == "native"
+    renamed = PrecisionPolicy(name="whatever", store="float32",
+                              compute="float32", accum="float32",
+                              fit="float32")
+    assert renamed.descriptor() == PRESETS["fp32"].descriptor()
+    assert (PRESETS["bf16_store"].descriptor()
+            != PRESETS["bf16_refined"].descriptor())
+    assert PRESETS["fp32"].descriptor() != PRESETS["bf16_store"].descriptor()
+
+
+# ------------------------------------------------------------ packed layer
+
+
+def test_packed_factor_astype_round_trips_pytree():
+    h, block = 37, 8
+    l = jnp.linalg.cholesky(props.spd_matrix(h))
+    pf = packing.PackedFactor.from_dense(l, block)
+    half = pf.astype(jnp.bfloat16)
+    assert half.dtype == jnp.bfloat16 and (half.h, half.block) == (h, block)
+    assert pf.nbytes == packing.packed_nbytes(h, block, jnp.float64)
+    assert half.nbytes * 4 == pf.nbytes          # f64 -> bf16 is 4x
+    # pytree round-trip keeps statics and the cast dtype
+    leaves, treedef = jax.tree.flatten(half)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back.dtype == jnp.bfloat16 and back.h == h
+    # the stored values are the bf16 rounding of the exact factor
+    np.testing.assert_allclose(half.dense(), l, rtol=1e-2, atol=1e-2)
+    # tree_astype round-trips the whole dataclass too
+    up = tree_astype(half, jnp.float32)
+    assert up.dtype == jnp.float32 and up.block == block
+
+
+def test_fit_stores_theta_at_policy_dtype():
+    a = props.spd_matrix(32)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1.0, 4)
+    native = picholesky.fit(a, sample, 2, block=8,
+                            backend=ReferenceBackend())   # pinned native
+    assert native.theta.dtype == a.dtype          # inherit — pre-policy fit
+
+    bk = _bk("reference", "bf16_store", block=8)
+    half = picholesky.fit(a, sample, 2, block=8, backend=bk)
+    assert half.theta.dtype == jnp.bfloat16       # stored at policy dtype
+    assert half.center.dtype == jnp.float32       # λ center at fit dtype
+    # the bf16 Θ is the rounding of a full-precision fit, not a bf16 fit
+    np.testing.assert_allclose(np.asarray(half.theta, np.float64),
+                               np.asarray(native.theta, np.float64),
+                               rtol=1e-2, atol=1e-2)
+
+
+# ------------------------------------------------ kernels + refinement
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_bf16_solves_accumulate_in_fp32(backend):
+    """solve_packed under bf16 compute returns fp32 solutions within bf16
+    rounding of the exact solve — accumulation never happens in bf16."""
+    h, block = 32, 8
+    a = props.spd_matrix(h, dtype=jnp.float32)
+    l = jnp.linalg.cholesky(a)
+    g = jax.random.normal(jax.random.PRNGKey(2), (h,), jnp.float32)
+    pf = packing.PackedFactor.from_dense(l, block).astype(jnp.bfloat16)
+    out = _bk(backend, "bf16_store", block=block).solve_packed(pf, g)
+    assert out.dtype == jnp.float32
+    exact = jnp.linalg.solve(a, g)
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 5e-2, rel
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_refinement_recovers_fp32_accuracy(backend):
+    """One fp32 residual-refinement sweep contracts the bf16 interp_solve
+    error by at least an order of magnitude (the bf16_refined mechanism)."""
+    h, block = 48, 8
+    a = props.spd_matrix(h, dtype=jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(3), (h,), jnp.float32)
+    sample = picholesky.choose_sample_lambdas(1e-2, 1e1, 5)
+    lams = jnp.logspace(-2, 1, 9)
+
+    bk32 = _bk(backend, "fp32", block=block)
+    model32 = picholesky.fit(a, sample, 2, block=block, backend=bk32)
+    ref = model32.solve(lams, g, backend=bk32)
+
+    bk_store = _bk(backend, "bf16_store", block=block)
+    bk_ref = _bk(backend, "bf16_refined", block=block)
+    model16 = picholesky.fit(a, sample, 2, block=block, backend=bk_store)
+    raw = model16.solve(lams, g, backend=bk_store)
+    refined = picholesky.refine_solutions(model16, a, g, lams, raw,
+                                          backend=bk_ref)
+    err_raw = float(jnp.linalg.norm(raw - ref))
+    err_ref = float(jnp.linalg.norm(refined - ref))
+    assert err_ref < err_raw / 10, (err_raw, err_ref)
+    # refine_iters=0 is a strict no-op (same array out)
+    same = picholesky.refine_solutions(model16, a, g, lams, raw,
+                                       backend=bk_store)
+    assert same is raw
+
+
+# ------------------------------------------------------------------ engine
+
+
+def test_auto_chunk_doubles_under_bf16_storage():
+    strat = engine.PiCholeskyStrategy(g=4, block=16)
+    base = engine.CVEngine(strat, precision="fp32")
+    half = engine.CVEngine(strat, precision="bf16_store")
+    c32 = base._resolve_chunk(10_000, 64, jnp.float32)
+    c16 = half._resolve_chunk(10_000, 64, jnp.float32)
+    assert c16 == 2 * c32
+
+
+@pytest.mark.parametrize("backend,h,block", [
+    ("reference", 144, 32),       # the Table-4 regression problem size
+    ("pallas", 64, 16),           # interpret-mode kernels, CI-sized
+])
+def test_bf16_refined_reproduces_fp32_argmin(backend, h, block):
+    """Acceptance: bf16_refined reproduces the fp32 hold-out argmin
+    bit-for-bit on the regression grid, while unrefined bf16_store is NOT
+    held to that (on the kernel path it demonstrably shifts selection —
+    refinement is load-bearing, not decorative)."""
+    folds = props.regression_folds(h=h, n=420 if h == 144 else 3 * h, k=5,
+                                   seed=11, dtype=jnp.float32)
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=block)  # noqa: E731
+
+    def run(policy):
+        return engine.CVEngine(strat(), backend=backend, block=block,
+                               precision=policy).run(folds, LAMS)
+
+    r32 = run("fp32")
+    r16 = run("bf16_refined")
+    assert r16.extras["engine"]["precision"] == "bf16_refined"
+    assert float(r16.best_lam) == float(r32.best_lam)          # bit-for-bit
+    assert int(np.argmin(r16.errors)) == int(np.argmin(r32.errors))
+    np.testing.assert_allclose(r16.errors, r32.errors, rtol=2e-2, atol=2e-3)
+    # the refined curve tracks fp32 tighter than the unrefined one
+    r_store = run("bf16_store")
+    d_store = np.max(np.abs(r_store.errors - r32.errors))
+    d_ref = np.max(np.abs(r16.errors - r32.errors))
+    assert d_ref < d_store, (d_ref, d_store)
+
+
+def test_refinement_composes_with_chunking_and_async(tmp_path):
+    """The per-chunk refinement must not break the chunked == unchunked or
+    pipelined == serial contracts (same policy both sides ⇒ same math)."""
+    folds = props.regression_folds(h=32, k=4, dtype=jnp.float32)
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=8)  # noqa: E731
+    base = engine.CVEngine(strat(), precision="bf16_refined",
+                           lam_chunk=None).run(folds, LAMS)
+    chunked = engine.CVEngine(strat(), precision="bf16_refined",
+                              lam_chunk=7).run(folds, LAMS)
+    np.testing.assert_allclose(chunked.errors, base.errors,
+                               rtol=1e-5, atol=1e-6)
+    eng = engine.CVEngine(strat(), precision="bf16_refined", lam_chunk=7)
+    r_serial = eng.run_async(folds, LAMS, pipelined=False)
+    r_pipe = eng.run_async(folds, LAMS, pipelined=True)
+    np.testing.assert_array_equal(r_serial.errors, r_pipe.errors)
+
+
+def test_pinrmse_fit_dtype_routed_through_policy():
+    """The engine's old hardcoded ``jax_enable_x64`` probe is gone: the
+    PINRMSE curve fit runs at the policy's fit dtype."""
+    folds = props.regression_folds(h=24, k=4)                  # f64 data
+    r64 = engine.CVEngine(engine.PinrmseStrategy(g=4),
+                          precision="native").run(folds, LAMS)
+    assert r64.errors.dtype == np.float64                      # native: inherit
+    r32 = engine.CVEngine(engine.PinrmseStrategy(g=4),
+                          precision="fp32").run(folds, LAMS)
+    assert r32.errors.dtype == np.float32
+    assert abs(int(np.argmin(r32.errors)) - int(np.argmin(r64.errors))) <= 1
+
+
+# ------------------------------------------------------------------- cache
+
+
+def test_precision_is_part_of_cache_fingerprint():
+    """A bf16 entry can never silently serve an fp32 request (and vice
+    versa): different policies MISS each other and repopulate."""
+    folds = props.regression_folds(h=32, k=4, dtype=jnp.float32)
+    cache = factor_cache.FactorCache()
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=8)  # noqa: E731
+    r32 = engine.CVEngine(strat(), cache=cache, precision="fp32"
+                          ).run(folds, LAMS)
+    assert r32.extras["engine"]["cache"]["status"] == "miss"
+    r16 = engine.CVEngine(strat(), cache=cache, precision="bf16_store"
+                          ).run(folds, LAMS)
+    assert r16.extras["engine"]["cache"]["status"] == "miss"   # no stale hit
+    assert len(cache) == 2
+    # each policy hits its own entry afterwards
+    for pol in ("fp32", "bf16_store"):
+        r = engine.CVEngine(strat(), cache=cache, precision=pol
+                            ).run(folds, LAMS)
+        assert r.extras["engine"]["cache"]["status"] == "hit", pol
+    # key round-trips precision through JSON
+    entry = next(iter(cache.entries.values()))
+    key2 = factor_cache.CacheKey.from_json(entry.key.to_json())
+    assert key2.digest() == entry.key.digest()
+    assert {e.key.precision for e in cache.entries.values()} == {
+        PRESETS["fp32"].descriptor(), PRESETS["bf16_store"].descriptor()}
+
+
+def test_bf16_store_halves_cached_entry_bytes():
+    """Acceptance: bf16 storage halves Θ and packed-anchor bytes, the LRU
+    byte counters reflect the post-astype sizes, and ``bytes_saved``
+    reports the shrink vs the problem's own dtype."""
+    folds = props.regression_folds(h=32, k=4, dtype=jnp.float32)
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=8)  # noqa: E731
+
+    c32 = factor_cache.FactorCache()
+    engine.CVEngine(strat(), cache=c32, cache_anchors=True,
+                    precision="fp32").run(folds, LAMS)
+    c16 = factor_cache.FactorCache()
+    engine.CVEngine(strat(), cache=c16, cache_anchors=True,
+                    precision="bf16_store").run(folds, LAMS)
+
+    e32 = next(iter(c32.entries.values()))
+    e16 = next(iter(c16.entries.values()))
+    assert e16.state.theta.dtype == jnp.bfloat16
+    assert e16.anchors.vec.dtype == jnp.bfloat16
+    # Θ and anchors dominate the payload: the entry must land within 10%
+    # of exactly half the fp32 entry
+    assert e16.nbytes <= 0.55 * e32.nbytes, (e16.nbytes, e32.nbytes)
+    assert c16.stats["bytes"] == e16.nbytes
+    assert c16.stats["bytes_saved"] >= 0.9 * (e32.nbytes - e16.nbytes)
+    assert c32.stats["bytes_saved"] == 0          # fp32 data stored at fp32
+
+    # LRU budgets are honest under mixed precision: a budget sized for one
+    # fp32 entry holds TWO bf16 entries
+    budget = factor_cache.FactorCache(max_bytes=int(e32.nbytes * 1.1))
+    for g in (4, 5):
+        engine.CVEngine(engine.PiCholeskyStrategy(g=g, block=8),
+                        cache=budget, cache_anchors=True,
+                        precision="bf16_store").run(folds, LAMS)
+    assert len(budget) == 2 and budget.evictions == 0
+
+
+def test_bf16_entries_persist_and_replay(tmp_path):
+    """bf16 cached states survive the checkpoint round-trip with their
+    dtype (np.save keeps extension dtypes only as raw bytes — the manager
+    views them back) and replay bit-for-bit."""
+    folds = props.regression_folds(h=32, k=4, dtype=jnp.float32)
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=8)  # noqa: E731
+    cache = factor_cache.FactorCache()
+    eng = engine.CVEngine(strat(), cache=cache, cache_anchors=True,
+                          precision="bf16_store")
+    r1 = eng.run(folds, LAMS)
+    cache.save(str(tmp_path))
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert sorted(loaded.entries) == sorted(cache.entries)
+    back = next(iter(loaded.entries.values()))
+    assert np.asarray(back.state.theta).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back.state.theta),
+                                  np.asarray(
+        next(iter(cache.entries.values())).state.theta))
+    r2 = engine.CVEngine(strat(), cache=loaded, precision="bf16_store"
+                         ).run(folds, LAMS)
+    assert r2.extras["engine"]["cache"]["status"] == "hit"
+    np.testing.assert_array_equal(r1.errors, r2.errors)
+
+
+def test_warm_replay_zero_factorizations_under_bf16():
+    """The warm-replay contract survives the policy: a bf16 warm sweep
+    traces zero cholesky calls and replays its own cold sweep exactly."""
+    folds = props.regression_folds(h=32, k=4, dtype=jnp.float32)
+    strat = lambda: engine.PiCholeskyStrategy(g=4, block=8)  # noqa: E731
+    cache = factor_cache.FactorCache()
+    r_cold = engine.CVEngine(strat(), cache=cache, precision="bf16_refined"
+                             ).run(folds, LAMS)
+    bk = CountingBackend(ReferenceBackend())
+    warm = engine.CVEngine(strat(), backend=bk, cache=cache,
+                           precision="bf16_refined")
+    r_warm = warm.run(folds, LAMS)
+    assert bk.n_cholesky == 0
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+    np.testing.assert_array_equal(r_warm.errors, r_cold.errors)
+
+
+# ------------------------------------------------------------- entry points
+
+
+def test_best_lam_stays_at_fit_dtype_not_data_dtype():
+    """ridge_cv satellite: λ* must never quantize to a bf16 design's dtype
+    — the refit at λ* uses the CV-selected regularizer, not its bf16
+    rounding (a different model)."""
+    from repro.core import solvers
+    from repro.core.ridge_cv import RidgeCV
+
+    x64 = jax.random.normal(jax.random.PRNGKey(0), (96, 16), jnp.float64)
+    y64 = jax.random.normal(jax.random.PRNGKey(1), (96,), jnp.float64)
+    x, y = x64.astype(jnp.bfloat16), y64.astype(jnp.bfloat16)
+    model = RidgeCV(k_folds=4, n_lambdas=11, block=8)
+    theta, result = model.fit_theta(x, y)
+    lam_dtype = resolve_precision(None).fit_dtype(x.dtype)
+    assert lam_dtype == jnp.float32               # floored, not bf16
+    # the λ the solve actually used is the fp32 λ*, not its bf16 rounding
+    expect = solvers.solve_cholesky(x.T @ x, x.T @ y,
+                                    jnp.asarray(result.best_lam, lam_dtype))
+    np.testing.assert_array_equal(theta, expect)
+    # and the fp32 λ* genuinely differs from what the old x.dtype cast
+    # would have handed the solver (the quantization the fix removes)
+    assert float(jnp.asarray(result.best_lam, jnp.bfloat16)) \
+        != float(result.best_lam)
