@@ -1,0 +1,162 @@
+"""Multi-tenant serving bench: latency / throughput / cache hit-rate under
+the seeded Zipf traffic mix → ``BENCH_serving.json``.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python -m benchmarks.run serving
+
+The record is the serving layer's committed trajectory: queue-latency
+percentiles (p50/p99), request throughput, the shared cache's cross-tenant
+hit-rate, per-tenant stat partitions, and the fidelity audit — every
+unique problem's served argmin must be bit-for-bit the solo cold sweep's
+(Wilson et al., arXiv:2003.00617: shared approximate CV must *monitor*
+per-tenant assessment quality, not assume it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+if __package__ in (None, ""):               # direct script execution
+    import pathlib
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
+
+import jax
+
+if __name__ == "__main__":
+    jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from .common import SMOKE, emit, emit_json
+
+
+def run() -> None:
+    from repro.core import engine, factor_cache
+    from repro.serving import CVSweepServer, ServerConfig, TrafficConfig, \
+        make_traffic
+
+    if SMOKE:
+        cfg = TrafficConfig(n_requests=12, n_tenants=3, n_problems=3,
+                            h=16, n=128, grid_sizes=(9, 13),
+                            shifted_grid_every=5)
+        block, max_batch = 8, 4
+    else:
+        cfg = TrafficConfig(n_requests=48, n_tenants=6, n_problems=8,
+                            h=96, n=768, grid_sizes=(17, 25, 33),
+                            shifted_grid_every=11)
+        block, max_batch = 16, 8
+    strat = engine.PiCholeskyStrategy(g=4, block=block)
+    srv = CVSweepServer(strat, config=ServerConfig(max_batch=max_batch))
+
+    reqs = make_traffic(cfg)
+    # warm the jit caches on a throwaway problem — one request per grid
+    # shape — so the measured latencies are service latencies, not XLA
+    # compile times (the stacked-dispatch shapes still compile in-band,
+    # as they would in a live server)
+    from repro.serving import SweepRequest
+    from repro.testing import strategies as props
+    warm_folds = make_traffic(dataclasses.replace(
+        cfg, n_requests=1, n_tenants=1, n_problems=1,
+        seed=cfg.seed + 777))[0].folds
+    for q in cfg.grid_sizes:
+        srv.submit(SweepRequest("_warmup", warm_folds, props.log_grid(q)))
+    srv.drain()
+    warm_stats = srv.cache.stats
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.submit(r)
+    resps = srv.drain()
+    wall = time.perf_counter() - t0
+
+    lat = np.array([r.latency_s for r in resps])
+    stats = srv.stats
+    # traffic-only cache counters (the warmup round is excluded)
+    hits = stats["cache"]["hits"] - warm_stats["hits"]
+    misses = stats["cache"]["misses"] - warm_stats["misses"]
+    tenants = {t: rec for t, rec in stats["tenants"].items()
+               if t.startswith("tenant-")}
+    sharing = sum(1 for rec in tenants.values() if rec["hits"])
+
+    # fidelity audit: every unique (problem, grid) served bit-for-bit as a
+    # solo cold sweep of the same problem on a fresh cache
+    resp_by_id = {r.request_id: r for r in resps}   # service order ≠ submit
+    by_problem = {}
+    for req in reqs:
+        key = (id(req.folds), id(req.lams))
+        by_problem.setdefault(key, (req, []))[1].append(
+            resp_by_id[req.request_id])
+    audits = []
+    for req, served in by_problem.values():
+        solo = engine.CVEngine(strat, cache=factor_cache.FactorCache(),
+                               reuse="covering", cache_anchors=True
+                               ).run(req.folds, req.lams)
+        audits.append(dict(
+            n_served=len(served),
+            argmin_match=all(r.result.best_lam == solo.best_lam
+                             for r in served),
+            bitwise_match=all(np.array_equal(r.result.errors, solo.errors)
+                              for r in served)))
+    argmin_match = all(a["argmin_match"] for a in audits)
+
+    record = {
+        "schema": "bench_serving/v1",
+        "smoke": SMOKE,
+        "jax_backend": jax.default_backend(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "config": {
+            "n_requests": cfg.n_requests, "n_tenants": cfg.n_tenants,
+            "n_problems": cfg.n_problems, "h": cfg.h, "n": cfg.n,
+            "k": cfg.k, "zipf_a": cfg.zipf_a, "seed": cfg.seed,
+            "grid_sizes": list(cfg.grid_sizes),
+            "shifted_grid_every": cfg.shifted_grid_every,
+            "block": block, "max_batch": max_batch,
+            "strategy": strat.name,
+        },
+        "latency": {
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "mean_s": float(lat.mean()),
+            "max_s": float(lat.max()),
+        },
+        "throughput_rps": len(resps) / wall,
+        "wall_s": wall,
+        "cache": {
+            "hits": hits, "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "anchor_hits": stats["cache"]["anchor_hits"],
+            "entries": stats["cache"]["entries"],
+            "evictions": stats["cache"]["evictions"],
+            "bytes": stats["cache"]["bytes"],
+            "bytes_saved": stats["cache"]["bytes_saved"],
+            "live_bytes_saved": stats["cache"]["live_bytes_saved"],
+            "tenants_sharing": sharing,
+        },
+        "tenants": tenants,
+        "batching": {
+            "dispatches": stats["dispatches"],
+            "batch_mean": stats["batch_mean"],
+            "unique_problems": len(by_problem),
+        },
+        "fidelity": {
+            "problems_audited": len(audits),
+            "argmin_match": argmin_match,
+            "bitwise_match": all(a["bitwise_match"] for a in audits),
+        },
+    }
+    emit("serving_p50_latency", record["latency"]["p50_s"],
+         f"p99={record['latency']['p99_s']:.3f}s")
+    emit("serving_throughput", 0.0,
+         f"rps={record['throughput_rps']:.2f}")
+    emit("serving_hit_rate", 0.0,
+         f"hit_rate={record['cache']['hit_rate']:.3f}"
+         f",sharing={sharing}/{cfg.n_tenants}")
+    emit("serving_fidelity", 0.0, f"argmin_match={argmin_match}")
+    emit_json("BENCH_serving.json", record)
+
+
+if __name__ == "__main__":
+    run()

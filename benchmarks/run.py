@@ -3,8 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [names...]
 
 Prints ``name,us_per_call,derived`` CSV rows; benches with a machine-readable
-record (currently ``table3`` → ``BENCH_table3.json``) also write it to the
-repo root so the perf trajectory is committed alongside the code.
+record (``table3`` → ``BENCH_table3.json``, ``serving`` →
+``BENCH_serving.json``) also write it to the repo root so the perf
+trajectory is committed alongside the code.
 
 Environment: REPRO_BENCH_SCALE=ci|mid|paper controls problem sizes (ci
 default on this CPU container); REPRO_BENCH_SMOKE=1 shrinks everything to
@@ -17,8 +18,8 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from . import (bench_fig4_smoothness, bench_fig10_pinrmse, bench_fig11_nrmse,
-               bench_roofline, bench_table1_vec, bench_table3_timing,
-               bench_table4_holdout)
+               bench_roofline, bench_serving, bench_table1_vec,
+               bench_table3_timing, bench_table4_holdout)
 
 BENCHES = {
     "fig4": bench_fig4_smoothness.run,
@@ -28,6 +29,7 @@ BENCHES = {
     "fig10": bench_fig10_pinrmse.run,
     "fig11": bench_fig11_nrmse.run,
     "roofline": bench_roofline.run,
+    "serving": bench_serving.run,
 }
 
 def main() -> None:

@@ -1,9 +1,11 @@
 """Render §Dry-run / §Roofline markdown tables from results/dryrun/*.json,
-and the committed bench records (``BENCH_table3.json``) including the
-mixed-precision ``precision_sweep`` section.
+and the committed bench records (``BENCH_table3.json`` including the
+mixed-precision ``precision_sweep`` section, and the multi-tenant
+``BENCH_serving.json``).
 
     PYTHONPATH=src python scripts/render_tables.py [--out results/tables.md]
     PYTHONPATH=src python scripts/render_tables.py --bench BENCH_table3.json
+    PYTHONPATH=src python scripts/render_tables.py --bench BENCH_serving.json
 """
 import argparse
 import glob
@@ -26,11 +28,56 @@ def fmt_bytes(n):
         n /= 1024.0
 
 
+def render_serving(rec, lines):
+    """Markdown sections for a ``bench_serving/v1`` record."""
+    cfg = rec.get("config", {})
+    lat = rec.get("latency", {})
+    cache = rec.get("cache", {})
+    lines += [f"## Serving traffic (n={cfg.get('n_requests')} requests, "
+              f"{cfg.get('n_tenants')} tenants, "
+              f"{cfg.get('n_problems')} problems, h={cfg.get('h')}, "
+              f"zipf_a={cfg.get('zipf_a')})", "",
+              "| p50 latency | p99 latency | throughput | wall |",
+              "|---|---|---|---|",
+              f"| {fmt(lat.get('p50_s'))}s | {fmt(lat.get('p99_s'))}s "
+              f"| {fmt(rec.get('throughput_rps'), 2)} req/s "
+              f"| {fmt(rec.get('wall_s'))}s |", "",
+              "## Shared-cache hit-rate", "",
+              "| hits | misses | hit rate | anchor hits | tenants sharing "
+              "| evictions |",
+              "|---|---|---|---|---|---|",
+              f"| {cache.get('hits')} | {cache.get('misses')} "
+              f"| **{fmt(cache.get('hit_rate'), 3)}** "
+              f"| {cache.get('anchor_hits')} "
+              f"| {cache.get('tenants_sharing')}/{cfg.get('n_tenants')} "
+              f"| {cache.get('evictions')} |", ""]
+    tenants = rec.get("tenants", {})
+    if tenants:
+        lines += ["### Per-tenant partition", "",
+                  "| tenant | hits | misses | anchor hits | puts |",
+                  "|---|---|---|---|---|"]
+        for t, r in sorted(tenants.items()):
+            lines.append(f"| {t} | {r.get('hits')} | {r.get('misses')} "
+                         f"| {r.get('anchor_hits')} | {r.get('puts')} |")
+        lines.append("")
+    fid = rec.get("fidelity", {})
+    bat = rec.get("batching", {})
+    lines += [f"batching: {bat.get('dispatches')} dispatches, mean batch "
+              f"{fmt(bat.get('batch_mean'), 2)}; fidelity: "
+              f"{fid.get('problems_audited')} problems audited, "
+              f"argmin_match=**{fid.get('argmin_match')}**, "
+              f"bitwise_match=**{fid.get('bitwise_match')}**", ""]
+    return lines
+
+
 def render_bench(path):
-    """Markdown lines for the committed BENCH_table3.json record."""
+    """Markdown lines for a committed BENCH_*.json record."""
     rec = json.load(open(path))
     lines = [f"# Bench record: {os.path.basename(path)} "
              f"({rec.get('schema', '?')}, smoke={rec.get('smoke')})", ""]
+
+    if rec.get("schema") == "bench_serving/v1":
+        return render_serving(rec, lines)
 
     wc = rec.get("warm_vs_cold", {})
     if wc.get("grids"):

@@ -128,6 +128,16 @@ class StrategyBase:
     #: not a win).
     state_uses_hessian: bool = False
 
+    #: True when ``fold_state`` is a pure PER-FOLD function of
+    #: (h_tr_f, g_tr_f, anchors, params, backend) — independent of the fold
+    #: index and of every *other* fold — AND ``prepare`` depends only on
+    #: the λ grid.  That is what lets :meth:`CVEngine.run_batch` stack
+    #: several tenants' fold axes into ONE ``fold_state`` dispatch and
+    #: slice the batched state back per problem.  Strategies coupling
+    #: folds (warmstart's fold-0 anchor fit) or reading the fold index
+    #: must leave this False.
+    batchable_state: bool = False
+
     def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
         return ()
 
@@ -203,6 +213,7 @@ class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
     chol_fn: Optional[Callable] = None
     name: str = "picholesky"
     state_uses_hessian = True
+    batchable_state = True
 
     def n_exact_chol(self, k, q):
         return k * self.g
@@ -927,7 +938,12 @@ class CVEngine:
                        consecutive non-improving chunks the stream stops.
                        ``stop_tol=0`` stops only on strict non-improvement,
                        so on a unimodal hold-out curve the returned minimum
-                       is exactly the full grid's argmin.
+                       is exactly the full grid's argmin.  A chunk whose
+                       mean hold-out error is non-finite (singular fold,
+                       bf16 overflow) raises ``FloatingPointError`` — the
+                       search refuses to rank errors it cannot compare
+                       rather than silently counting the chunk as
+                       non-improving and "stopping" on a ``nan`` λ*.
         stop_patience: consecutive non-improving chunks tolerated before
                        stopping (default 2).
         pipelined:     ``True`` dispatches stages without blocking — the
@@ -1030,14 +1046,32 @@ class CVEngine:
             width = min(chunk, q - c * chunk)
             fold_errs = np.asarray(e)[:, :width]    # syncs this chunk only
             mean = fold_errs.mean(0)
-            i = int(np.argmin(mean))
+            finite = np.isfinite(mean)
+            if not finite.all() and stop_tol is not None:
+                # `mean[i] < best` is False for NaN, so a non-finite chunk
+                # (singular fold, bf16 overflow) would silently feed the
+                # non-improvement streak and the search could "stop" on a
+                # curve it never actually ranked — refuse instead
+                bad = lams_np[c * chunk + np.flatnonzero(~finite)]
+                raise FloatingPointError(
+                    f"non-finite hold-out mean at λ={bad[:4].tolist()} "
+                    f"(chunk {c}): the early-stop search cannot rank "
+                    "non-finite errors; fix the fold/precision (singular "
+                    "fold? bf16 overflow → 'bf16_refined') or sweep the "
+                    "full grid with stop_tol=None")
             n_eval += width
-            improved = (bool(mean[i] < best * (1.0 - stop_tol))
-                        if stop_tol is not None and np.isfinite(best)
-                        else bool(mean[i] < best))
-            if mean[i] < best:      # strict: ties keep the earlier λ,
-                best = float(mean[i])   # matching np.argmin on the full curve
-                best_lam = float(lams_np[c * chunk + i])
+            if finite.any():
+                # argmin over the FINITE entries only — np.argmin would
+                # return the first NaN's index and poison best/best_lam
+                i = int(np.flatnonzero(finite)[np.argmin(mean[finite])])
+                improved = (bool(mean[i] < best * (1.0 - stop_tol))
+                            if stop_tol is not None and np.isfinite(best)
+                            else bool(mean[i] < best))
+                if mean[i] < best:   # strict: ties keep the earlier λ,
+                    best = float(mean[i])  # matching argmin on the full curve
+                    best_lam = float(lams_np[c * chunk + i])
+            else:
+                improved = False    # an all-non-finite chunk never improves
             streak = 0 if improved else streak + 1
             stopped = (stop_tol is not None and streak >= stop_patience
                        and c + 1 < n_c)
@@ -1213,3 +1247,175 @@ class CVEngine:
                 mesh=None if mesh is None else dict(mesh.shape),
                 donated=bool(self.donate), lam_chunk=self.lam_chunk,
                 cache=cache_info))
+
+    # -- batched admission (multi-tenant serving) ---------------------------
+
+    def _cache_scope(self, tenant: Optional[str]):
+        """Tenant-attribution scope on the attached cache (no-op without
+        one) — the serving layer's per-tenant hit-rate partitioning."""
+        if self.cache is None or tenant is None:
+            return contextlib.nullcontext()
+        return self.cache.tenant_scope(tenant)
+
+    def run_batch(self, problems, *, tenants=None):
+        """Admission-batched sweep: N compatible CV problems, ONE stacked
+        ``fold_state`` dispatch, per-problem λ streams — the multi-tenant
+        serving entry point (:mod:`repro.serving`).
+
+        ``problems`` is a sequence of ``(FoldData, lams)`` pairs;
+        ``tenants`` an optional parallel sequence of tenant labels for the
+        cache's per-tenant stat partitioning.  Returns one
+        :class:`~repro.core.folds.CVResult` per problem, in order, each
+        bit-for-bit equal to what a solo :meth:`run` of that problem
+        against the same cache state would produce (the per-fold math is
+        identical — stacking reorders *batching*, never arithmetic).
+
+        Dispatch per problem: content fingerprint → cache hit (λ stream
+        only) | anchor refit | cold.  All the batch's cold problems are
+        concatenated along the fold axis and factorized in **one** batched
+        ``fold_state`` call, then sliced back and cached under their own
+        per-problem keys — so cross-tenant sharing still works request-by-
+        request afterwards.  A problem whose fingerprint duplicates an
+        earlier problem *in the same batch* is looked up again after the
+        cold stage populates, and served as a genuine hit.
+
+        The fused stacking path engages when every problem shares the fold
+        geometry (h, n_f, dtype), derives the same anchor set, the strategy
+        advertises ``batchable_state`` (and ``cache_meta``), a cache is
+        attached, and no mesh is configured; otherwise the batch degrades
+        gracefully to per-problem :meth:`run` calls (same results, no
+        stacked dispatch).
+        """
+        problems = [(f, jnp.asarray(l)) for f, l in problems]
+        if tenants is None:
+            tenants = [None] * len(problems)
+        if len(tenants) != len(problems):
+            raise ValueError(f"{len(tenants)} tenant labels for "
+                             f"{len(problems)} problems")
+        if not problems:
+            return []
+        strat = self.strategy
+        metas = [strat.cache_meta(l) if hasattr(strat, "cache_meta") else None
+                 for _, l in problems]
+        fusable = (self.cache is not None and self.reuse is not False
+                   and self.mesh is None
+                   and getattr(strat, "batchable_state", False)
+                   and all(m is not None for m in metas))
+        if fusable:
+            a0 = np.asarray(metas[0]["anchors"])
+            f0 = problems[0][0]
+            fusable = all(
+                np.array_equal(np.asarray(m["anchors"]), a0)
+                and f.fold_hess.shape[1:] == f0.fold_hess.shape[1:]
+                and f.x_folds.shape[1:] == f0.x_folds.shape[1:]
+                and f.fold_hess.dtype == f0.fold_hess.dtype
+                for (f, _), m in zip(problems, metas))
+        if not fusable:
+            # incompatible admission: same cache/engine, per-problem runs
+            out = []
+            for (f, l), t in zip(problems, tenants):
+                with self._cache_scope(t):
+                    out.append(self.run(f, l))
+            return out
+
+        cache = self.cache
+        splits = [self._split(f.hess, f.grad, f.fold_hess, f.fold_grad)
+                  for f, _ in problems]
+        keys = [cachelib.make_key(
+            h_tr, m["anchors"], block=m["params"]["block"],
+            backend=self._bk.name, params=m["params"],
+            precision=self._prec.descriptor())
+            for (h_tr, _), m in zip(splits, metas)]
+        with_anchors = (self.cache_anchors
+                        and hasattr(strat, "fold_state_and_anchors"))
+
+        # pass 1 — fingerprint lookup; first occurrence of each digest
+        # resolves now, duplicates defer until the cold stage has populated
+        n = len(problems)
+        entries: list = [None] * n
+        statuses: list = [None] * n
+        first_of: dict = {}
+        cold_idx: list = []
+        for i, key in enumerate(keys):
+            digest = key.digest()
+            if digest in first_of:
+                continue                      # deferred to pass 3
+            first_of[digest] = i
+            with self._cache_scope(tenants[i]):
+                entry = cache.lookup(key, self.reuse)
+                if entry is not None:
+                    entries[i], statuses[i] = entry, "hit"
+                    continue
+                pf = (cache.get_anchors(key)
+                      if with_anchors else None)
+            if pf is not None:
+                state = self._refit_from_anchors(pf, metas[i])
+                with self._cache_scope(tenants[i]):
+                    entries[i] = cache.put(key, state, pf)
+                statuses[i] = "refit"
+            else:
+                cold_idx.append(i)
+
+        # pass 2 — ONE stacked fold_state dispatch for every cold problem
+        if cold_idx:
+            h_stack = jnp.concatenate([splits[i][0] for i in cold_idx])
+            g_stack = jnp.concatenate([splits[i][1] for i in cold_idx])
+            x_stack = jnp.concatenate(
+                [problems[i][0].x_folds for i in cold_idx])
+            y_stack = jnp.concatenate(
+                [problems[i][0].y_folds for i in cold_idx])
+            with self._stage_scope("fold_state"):
+                state, avec = self._state_fn(None, with_anchors)(
+                    h_stack, g_stack, x_stack, y_stack,
+                    problems[cold_idx[0]][1])
+            off = 0
+            for i in cold_idx:
+                k_i = splits[i][0].shape[0]
+                st_i = jax.tree.map(lambda x: x[off:off + k_i], state)
+                pf_i = (packing.PackedFactor(
+                    vec=avec[off:off + k_i], h=splits[i][0].shape[-1],
+                    block=metas[i]["params"]["block"])
+                    if with_anchors else None)
+                off += k_i
+                with self._cache_scope(tenants[i]):
+                    entries[i] = cache.put(keys[i], st_i, pf_i)
+                statuses[i] = "miss"
+
+        # pass 3 — in-batch duplicates are genuine hits now.  If LRU
+        # pressure already evicted the first occurrence's entry, its
+        # in-memory object is still referenced in `entries` — serve from
+        # that (the miss the lookup just counted is accurate: the cache
+        # no longer holds it).
+        for i, key in enumerate(keys):
+            if entries[i] is not None:
+                continue
+            with self._cache_scope(tenants[i]):
+                entry = cache.lookup(key, self.reuse)
+            entries[i] = entry if entry is not None \
+                else entries[first_of[key.digest()]]
+            statuses[i] = "hit"
+
+        # λ streams — per problem (grids differ), through the shared
+        # chunked replay stage; O(chunk · P) as everywhere else
+        replay = self._replay_fn(None)
+        results = []
+        for i, ((folds_i, lams_i), (h_tr, g_tr)) in enumerate(
+                zip(problems, splits)):
+            with self._stage_scope("fold_errors"):
+                errs = replay(entries[i].state, h_tr, g_tr, folds_i.x_folds,
+                              folds_i.y_folds, lams_i)
+            k_i, q_i = h_tr.shape[0], int(lams_i.shape[0])
+            n_chol = (strat.n_exact_chol(k_i, q_i)
+                      if statuses[i] == "miss" else 0)
+            info = dict(status=statuses[i],
+                        digest=entries[i].key.digest()[:12],
+                        policy=self.reuse, tenant=tenants[i], **cache.stats)
+            results.append(CVResult.from_errors(
+                lams_i, np.asarray(errs).mean(0), n_chol,
+                engine=dict(strategy=strat.name, backend=self._bk.name,
+                            precision=self._prec.name, mesh=None,
+                            donated=bool(self.donate),
+                            lam_chunk=self.lam_chunk, cache=info,
+                            batch=dict(size=n, index=i,
+                                       cold=len(cold_idx)))))
+        return results

@@ -52,6 +52,7 @@ curve evaluation is truncated.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -236,9 +237,19 @@ class FactorCache:
     evicted digest simply misses and repopulates (all lookup indexes are
     purged with the entry), so a stale hit is impossible.
 
-    Counters (``hits`` / ``misses`` / ``anchor_hits`` / ``evictions``) are
-    cumulative over the cache's lifetime; tests and the warm-vs-cold bench
-    read them via :attr:`stats`.
+    Counters (``hits`` / ``misses`` / ``anchor_hits`` / ``evictions`` /
+    ``bytes_saved``) are cumulative over the cache's lifetime — eviction
+    never rewrites history (the *resident* saving is the separate
+    :attr:`live_bytes_saved`); tests and the warm-vs-cold bench read them
+    via :attr:`stats`.
+
+    Multi-tenant deployments partition the read/write counters per tenant
+    with :meth:`tenant_scope`: every ``lookup`` / ``get_anchors`` / ``put``
+    inside the scope is also attributed to that tenant's row in
+    :attr:`tenant_stats`.  Attribution is bookkeeping only — the *entries*
+    are deliberately shared (cross-tenant reuse is the serving layer's
+    whole hit-rate story), and content addressing already guarantees a
+    tenant can never read a state its own bytes did not fingerprint.
     """
 
     def __init__(self, max_bytes: Optional[int] = None):
@@ -253,6 +264,13 @@ class FactorCache:
         self.misses = 0
         self.anchor_hits = 0
         self.evictions = 0
+        #: cumulative bytes mixed-precision storage has saved across every
+        #: ``put`` over the cache's lifetime (NOT shrunk by eviction — the
+        #: old live-entries-only accounting made an eviction retroactively
+        #: rewrite the reported saving)
+        self.bytes_saved = 0
+        self.tenant_stats: Dict[str, Dict[str, int]] = {}
+        self._tenant: Optional[str] = None
         self._tick = 0
 
     def __len__(self) -> int:
@@ -263,9 +281,11 @@ class FactorCache:
         return sum(e.nbytes for e in self.entries.values())
 
     @property
-    def bytes_saved(self) -> int:
-        """Bytes mixed-precision storage is saving vs keeping every resident
-        entry at its problem's (training-Hessian) dtype."""
+    def live_bytes_saved(self) -> int:
+        """Bytes mixed-precision storage is saving *right now* vs keeping
+        every resident entry at its problem's (training-Hessian) dtype —
+        shrinks when a reduced-precision entry is evicted, unlike the
+        cumulative :attr:`bytes_saved` counter."""
         return sum(e.bytes_saved for e in self.entries.values())
 
     @property
@@ -273,7 +293,41 @@ class FactorCache:
         return dict(entries=len(self.entries), hits=self.hits,
                     misses=self.misses, anchor_hits=self.anchor_hits,
                     evictions=self.evictions, bytes=self.total_bytes,
-                    bytes_saved=self.bytes_saved, max_bytes=self.max_bytes)
+                    bytes_saved=self.bytes_saved,
+                    live_bytes_saved=self.live_bytes_saved,
+                    max_bytes=self.max_bytes)
+
+    # ------------------------------------------------- per-tenant counters
+
+    @contextlib.contextmanager
+    def tenant_scope(self, tenant: Optional[str]):
+        """Attribute every cache operation inside the scope to ``tenant``'s
+        partition of the counters (``None`` = unattributed).  Scopes nest;
+        the innermost wins — the engine's batched-admission path switches
+        the scope per problem while the entries stay shared."""
+        prev, self._tenant = self._tenant, tenant
+        try:
+            yield self
+        finally:
+            self._tenant = prev
+
+    def _tenant_count(self, field: str, amount: int = 1) -> None:
+        if self._tenant is None:
+            return
+        rec = self.tenant_stats.setdefault(
+            self._tenant, dict(hits=0, misses=0, anchor_hits=0, puts=0))
+        rec[field] += amount
+
+    def hit_rate(self, tenant: Optional[str] = None) -> float:
+        """hits / (hits + misses), overall or for one tenant's partition."""
+        if tenant is None:
+            hits, misses = self.hits, self.misses
+        else:
+            rec = self.tenant_stats.get(
+                tenant, dict(hits=0, misses=0))
+            hits, misses = rec["hits"], rec["misses"]
+        total = hits + misses
+        return hits / total if total else 0.0
 
     def _touch(self, entry: CacheEntry) -> None:
         self._tick += 1
@@ -302,8 +356,10 @@ class FactorCache:
                         best_width, entry = width, cand
         if entry is None:
             self.misses += 1
+            self._tenant_count("misses")
             return None
         self.hits += 1
+        self._tenant_count("hits")
         entry.hits += 1
         self._touch(entry)
         return entry
@@ -317,6 +373,7 @@ class FactorCache:
         entry = self.entries[digest]
         if entry.anchors is not None:  # entry may have been repopulated bare
             self.anchor_hits += 1
+            self._tenant_count("anchor_hits")
             self._touch(entry)
         return entry.anchors
 
@@ -330,6 +387,8 @@ class FactorCache:
         entry = CacheEntry(key=key, state=state, anchors=anchors,
                            nbytes=nbytes,
                            bytes_saved=max(0, baseline - nbytes))
+        self.bytes_saved += entry.bytes_saved
+        self._tenant_count("puts")
         if digest not in self.entries:
             self._by_base.setdefault(key.base_digest(), []).append(digest)
         self.entries[digest] = entry

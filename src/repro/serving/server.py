@@ -1,0 +1,227 @@
+"""Request-queue CV sweep server with admission batching.
+
+Tenants submit ridge-CV problems (folds + λ grid + precision); an
+admission layer groups *compatible geometries* — same fold shape, dtype,
+anchor set and precision — into one stacked folds × λ dispatch through
+:meth:`~repro.core.engine.CVEngine.run_batch`, and every engine in the
+pool shares ONE content-addressed
+:class:`~repro.core.factor_cache.FactorCache`, so a tenant's anchor
+factorizations serve every later tenant with the same training Hessians
+(the cache fingerprint guarantees byte-identical data, so cross-tenant
+reuse can never serve stale or foreign factors).
+
+Service discipline is FIFO **across admission groups** (the group whose
+head request is oldest is served next) and FIFO within a group, bounded
+by ``max_batch`` requests per dispatch.  Results are isolated per tenant:
+:meth:`CVSweepServer.take_responses` hands a tenant only its own
+responses.
+
+The flow::
+
+    submit() ──► admission queues (keyed by geometry) ──► step()
+                     │                                      │
+                     │ same (h, k, n_f, dtype,              │ one
+                     │       anchors, precision)            │ run_batch
+                     ▼                                      ▼
+              [req, req, …]  ──────────────────►  shared FactorCache
+                                                   hit | refit | miss
+
+Driven synchronously from the host (``submit`` + ``step``/``drain``) —
+the same single-process idiom as ``examples/serve_lm.py``; the queue
+discipline, not threads, provides the batching.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import factor_cache as cachelib
+from repro.core.engine import CVEngine, CVStrategy, PiCholeskyStrategy
+from repro.core.folds import CVResult, FoldData
+from repro.core.precision import resolve_precision
+
+__all__ = ["SweepRequest", "SweepResponse", "ServerConfig", "CVSweepServer"]
+
+
+@dataclasses.dataclass
+class SweepRequest:
+    """One tenant's CV problem: folds, a λ grid, and a precision preset
+    (``None`` = the server's default policy)."""
+
+    tenant: str
+    folds: FoldData
+    lams: jax.Array
+    precision: Optional[str] = None
+    request_id: int = -1          # assigned by the server at submit()
+    submitted_at: float = 0.0     # perf_counter timestamp, set at submit()
+
+
+@dataclasses.dataclass
+class SweepResponse:
+    """The served result plus its service metadata.
+
+    ``latency_s`` is queue latency: submit() → the dispatch that served
+    the request completing.  ``status`` is the cache disposition the
+    engine reported ('hit' | 'refit' | 'miss').
+    """
+
+    tenant: str
+    request_id: int
+    result: CVResult
+    latency_s: float
+    batch_size: int
+    status: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Admission/batching knobs.
+
+    max_batch:   requests fused into one ``run_batch`` dispatch.
+    reuse:       cache policy for every pooled engine ('covering' lets a
+                 superset-anchor entry serve a subset request).
+    cache_bytes: byte budget of the ONE shared cache (None = unbounded).
+    cache_anchors: also cache packed anchor factors, enabling the
+                 zero-factorization refit path across tenants.
+    lam_chunk:   λ-chunk policy forwarded to the engines.
+    """
+
+    max_batch: int = 8
+    reuse: str = "covering"
+    cache_bytes: Optional[int] = None
+    cache_anchors: bool = True
+    lam_chunk: object = "auto"
+
+
+class CVSweepServer:
+    """Multi-tenant sweep server: one strategy + backend, an engine pool
+    keyed by precision preset, one shared factor cache."""
+
+    def __init__(self, strategy: Optional[CVStrategy] = None,
+                 backend: object = "reference", *,
+                 config: Optional[ServerConfig] = None,
+                 precision: Optional[str] = None):
+        self.config = config or ServerConfig()
+        self.strategy = strategy or PiCholeskyStrategy()
+        self._backend = backend
+        self._default_precision = resolve_precision(precision).name
+        self.cache = cachelib.FactorCache(max_bytes=self.config.cache_bytes)
+        self._engines: Dict[str, CVEngine] = {}
+        # admission key -> FIFO of pending requests
+        self._queues: Dict[tuple, Deque[SweepRequest]] = \
+            collections.OrderedDict()
+        self._responses: Dict[str, List[SweepResponse]] = {}
+        self._next_id = 0
+        self.served = 0
+        self.dispatches = 0
+
+    # -- engine pool ------------------------------------------------------
+
+    def engine(self, precision: Optional[str] = None) -> CVEngine:
+        """The pooled engine for a precision preset (compilations and the
+        shared cache amortize across requests)."""
+        name = (resolve_precision(precision).name if precision is not None
+                else self._default_precision)
+        if name not in self._engines:
+            self._engines[name] = CVEngine(
+                strategy=self.strategy, backend=self._backend,
+                precision=name, cache=self.cache,
+                reuse=self.config.reuse,
+                cache_anchors=self.config.cache_anchors,
+                lam_chunk=self.config.lam_chunk)
+        return self._engines[name]
+
+    # -- admission --------------------------------------------------------
+
+    def _admission_key(self, req: SweepRequest) -> tuple:
+        """Geometry fingerprint two requests must share to ride one
+        stacked dispatch: fold shapes + dtype + anchor set + precision.
+        An unkeyable strategy (no cache meta) gets a singleton group."""
+        eng = self.engine(req.precision)
+        meta = (self.strategy.cache_meta(req.lams)
+                if hasattr(self.strategy, "cache_meta") else None)
+        if meta is None:
+            return ("solo", req.request_id)
+        f = req.folds
+        return (tuple(f.fold_hess.shape), tuple(f.x_folds.shape),
+                str(f.fold_hess.dtype),
+                tuple(np.asarray(meta["anchors"]).tolist()),
+                eng._prec.name)
+
+    def submit(self, req: SweepRequest) -> int:
+        """Enqueue a request; returns its assigned request id."""
+        req.request_id = self._next_id
+        self._next_id += 1
+        req.submitted_at = time.perf_counter()
+        self._queues.setdefault(self._admission_key(req),
+                                collections.deque()).append(req)
+        return req.request_id
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- service ----------------------------------------------------------
+
+    def step(self) -> List[SweepResponse]:
+        """Serve one batch: pick the admission group whose head request is
+        oldest, dispatch up to ``max_batch`` of it through ``run_batch``,
+        and record per-tenant responses.  Returns the responses served
+        (empty when idle)."""
+        if not self._queues:
+            return []
+        key = min(self._queues, key=lambda k: self._queues[k][0].request_id)
+        queue = self._queues[key]
+        batch = [queue.popleft()
+                 for _ in range(min(self.config.max_batch, len(queue)))]
+        if not queue:
+            del self._queues[key]
+
+        eng = self.engine(batch[0].precision)
+        results = eng.run_batch([(r.folds, r.lams) for r in batch],
+                                tenants=[r.tenant for r in batch])
+        done = time.perf_counter()
+        out = []
+        for req, res in zip(batch, results):
+            info = res.extras.get("engine", {}).get("cache") or {}
+            resp = SweepResponse(
+                tenant=req.tenant, request_id=req.request_id, result=res,
+                latency_s=done - req.submitted_at, batch_size=len(batch),
+                status=info.get("status", "bypass"))
+            self._responses.setdefault(req.tenant, []).append(resp)
+            out.append(resp)
+        self.served += len(batch)
+        self.dispatches += 1
+        return out
+
+    def drain(self) -> List[SweepResponse]:
+        """Serve until the queues are empty; returns everything served."""
+        out: List[SweepResponse] = []
+        while self._queues:
+            out.extend(self.step())
+        return out
+
+    # -- per-tenant isolation ---------------------------------------------
+
+    def take_responses(self, tenant: str) -> List[SweepResponse]:
+        """Pop (and return) the responses belonging to ``tenant`` — and
+        only those; one tenant can never observe another's results."""
+        return self._responses.pop(tenant, [])
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters + the shared cache's cumulative stats (with
+        its per-tenant partitioning)."""
+        return dict(served=self.served, dispatches=self.dispatches,
+                    pending=self.pending,
+                    batch_mean=(self.served / self.dispatches
+                                if self.dispatches else 0.0),
+                    engines=sorted(self._engines),
+                    cache=self.cache.stats,
+                    tenants={t: dict(rec)
+                             for t, rec in self.cache.tenant_stats.items()})

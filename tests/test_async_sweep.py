@@ -220,6 +220,59 @@ def test_early_stop_validation_and_degenerate_cases(folds):
         rtol=1e-9)
 
 
+# ------------------------------------------------ non-finite hold-out means
+
+
+def test_early_stop_refuses_nonfinite_chunk(folds):
+    """Regression: a NaN hold-out mean (poisoned fold) used to feed the
+    non-improvement streak silently — ``mean[i] < best`` is always False
+    for NaN — so the search 'stopped' with ``best_lam=nan``.  It must
+    refuse instead."""
+    bad = folds._replace(y_folds=folds.y_folds.at[0, 0].set(jnp.nan))
+    eng = engine.CVEngine(_strat(), lam_chunk=4)
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        eng.run_async(bad, LAMS, stop_tol=0.0, stop_patience=2)
+    # without early stopping the full grid still streams: the caller sees
+    # the NaN curve, never a silently truncated one
+    r = engine.CVEngine(_strat(), lam_chunk=4).run_async(bad, LAMS)
+    info = r.extras["engine"]["async"]
+    assert not info["stopped"]
+    assert info["lams_evaluated"] == LAMS.size
+    assert not np.isfinite(r.errors).any()
+
+
+def test_partial_nonfinite_chunk_tracks_finite_argmin(folds):
+    """A chunk that is only partially non-finite (e.g. overflow at large
+    λ) must rank its finite entries — np.argmin would return the first
+    NaN's index and poison the running ``best_lam``."""
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True, eq=False)
+    class PoisonTail(engine.PiCholeskyStrategy):
+        cutoff: float = 1e2
+
+        def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f,
+                        lams, aux, bk):
+            errs = super().fold_errors(state, f_idx, h_tr_f, g_tr_f,
+                                       x_f, y_f, lams, aux, bk)
+            return jnp.where(lams > self.cutoff, jnp.nan, errs)
+
+    strat = PoisonTail(g=4, block=8, cutoff=1e2)
+    parts = list(engine.CVEngine(strat, lam_chunk=8).sweep_async(
+        folds, WIDE))
+    curve = np.concatenate([p.errors for p in parts])
+    finite = np.isfinite(curve)
+    assert finite.any() and not finite.all()    # the poison straddles
+    expect = float(np.asarray(WIDE)[
+        np.flatnonzero(finite)[np.argmin(curve[finite])]])
+    assert parts[-1].best_lam == expect
+    assert np.isfinite(parts[-1].best_error)
+    # under stop_tol the poisoned chunk refuses, same as the all-NaN case
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        engine.CVEngine(strat, lam_chunk=8).run_async(folds, WIDE,
+                                                      stop_tol=0.0)
+
+
 # ------------------------------------------------------- cache composition
 
 

@@ -554,3 +554,41 @@ def test_cache_key_fingerprint_fields(folds):
     assert key3.digest() != key.digest()
     assert key3.anchor_digest() == key.anchor_digest()
     assert key3.base_digest() != key.base_digest()
+
+
+# ------------------------------------------------------- byte accounting
+
+
+def test_bytes_saved_survives_eviction():
+    """Regression: ``stats['bytes_saved']`` was derived from live entries
+    only, so evicting a bf16 entry retroactively shrank the reported
+    savings.  It is a cumulative counter now (like hits/evictions);
+    ``live_bytes_saved`` keeps the old live-entries meaning."""
+    folds32 = _folds(dtype=jnp.float32)
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache, cache_anchors=True,
+                    precision="bf16_store").run(folds32, LAMS)
+    one = next(iter(cache.entries.values()))
+    saved_one = one.bytes_saved
+    assert saved_one > 0                      # bf16 storage shrank fp32 data
+
+    budget = factor_cache.FactorCache(max_bytes=2 * one.nbytes +
+                                      one.nbytes // 2)
+    for seed in (1, 2, 3):                    # same payload size per entry
+        engine.CVEngine(_strat(), cache=budget, cache_anchors=True,
+                        precision="bf16_store").run(
+            _folds(seed=seed, dtype=jnp.float32), LAMS)
+    assert budget.evictions == 1 and len(budget) == 2
+    # cumulative: all three puts' savings, eviction does not claw back
+    assert budget.stats["bytes_saved"] == 3 * saved_one
+    # live: only the two surviving entries
+    assert budget.stats["live_bytes_saved"] == 2 * saved_one
+    assert budget.live_bytes_saved == sum(
+        e.bytes_saved for e in budget.entries.values())
+
+    # native-precision data stored at its own dtype saves nothing, evicted
+    # or not
+    native = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=native).run(_folds(), LAMS)
+    assert native.stats["bytes_saved"] == 0
+    assert native.stats["live_bytes_saved"] == 0

@@ -1,0 +1,282 @@
+"""Multi-tenant sweep serving: admission batching, cross-tenant cache
+sharing, per-tenant isolation.
+
+The acceptance contracts live here:
+
+* **serving fidelity** — a request served through the batched admission
+  path returns exactly what a solo cold :meth:`CVEngine.run` of the same
+  problem would (bit-for-bit error curve, hence bit-for-bit argmin);
+* **cross-tenant sharing** — two tenants with byte-identical training
+  Hessians share anchors across requests (hit or anchor refit, zero new
+  factorizations) while a perturbed Hessian MUST miss — and under LRU
+  eviction pressure a tenant is never served another problem's stale
+  factors;
+* **isolation** — ``take_responses(tenant)`` yields only that tenant's
+  results.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, factor_cache
+from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.serving import (CVSweepServer, ServerConfig, SweepRequest,
+                           TrafficConfig, make_traffic)
+from repro.testing import strategies as props
+
+LAMS = props.log_grid(17)
+LAMS2 = props.log_grid(25)                  # same decades → same anchors
+SHIFTED = props.log_grid(17, -2.0, 3.0)     # different decades → different
+
+
+def _strat(**kw):
+    kw.setdefault("g", 4)
+    kw.setdefault("block", 8)
+    return engine.PiCholeskyStrategy(**kw)
+
+
+def _folds(seed=1, **kw):
+    kw.setdefault("h", 20)
+    kw.setdefault("n", 160)
+    return props.regression_folds(seed=seed, **kw)
+
+
+def _server(**cfg_kw):
+    return CVSweepServer(_strat(), config=ServerConfig(**cfg_kw))
+
+
+def _solo(folds, lams, **kw):
+    """The solo cold reference: same strategy, fresh cache-attached engine
+    (the state+replay split the serving path also runs)."""
+    eng = engine.CVEngine(_strat(), cache=factor_cache.FactorCache(),
+                          reuse="covering", cache_anchors=True, **kw)
+    return eng.run(folds, lams)
+
+
+# ----------------------------------------------------------- traffic
+
+
+def test_traffic_is_deterministic():
+    cfg = TrafficConfig(n_requests=16, n_problems=3, h=12, n=96)
+    a, b = make_traffic(cfg), make_traffic(cfg)
+    assert len(a) == len(b) == 16
+    for ra, rb in zip(a, b):
+        assert ra.tenant == rb.tenant
+        np.testing.assert_array_equal(ra.lams, rb.lams)
+        np.testing.assert_array_equal(ra.folds.hess, rb.folds.hess)
+    # a different seed reshuffles the problem mix
+    c = make_traffic(TrafficConfig(n_requests=16, n_problems=3, h=12, n=96,
+                                   seed=7))
+    assert any(not np.array_equal(ra.folds.hess, rc.folds.hess)
+               for ra, rc in zip(a, c))
+
+
+def test_traffic_zipf_head_dominates():
+    """The Zipf mix must actually overlap: the hottest problem draws more
+    requests than a uniform share (that overlap IS the cache
+    opportunity)."""
+    cfg = TrafficConfig(n_requests=64, n_problems=8, h=12, n=96, zipf_a=1.3)
+    reqs = make_traffic(cfg)
+    counts = {}
+    for r in reqs:
+        counts[id(r.folds)] = counts.get(id(r.folds), 0) + 1
+    assert max(counts.values()) > 64 / 8
+
+
+# ----------------------------------------------------- serving fidelity
+
+
+def test_batched_serving_matches_solo_cold_bitwise():
+    """Acceptance: per-tenant results through the admission batch are
+    bit-for-bit the solo cold sweep's — stacking reorders batching, never
+    arithmetic."""
+    fa, fb = _folds(seed=1), _folds(seed=2)
+    srv = _server(max_batch=4)
+    for req in [SweepRequest("a", fa, LAMS), SweepRequest("b", fb, LAMS),
+                SweepRequest("c", fa, LAMS2)]:
+        srv.submit(req)
+    resps = {r.tenant: r for r in srv.drain()}
+    for tenant, folds, lams in [("a", fa, LAMS), ("b", fb, LAMS),
+                                ("c", fa, LAMS2)]:
+        solo = _solo(folds, lams)
+        np.testing.assert_array_equal(resps[tenant].result.errors,
+                                      solo.errors)
+        assert resps[tenant].result.best_lam == solo.best_lam
+
+
+def test_in_batch_duplicate_is_single_factorization():
+    """Two tenants submitting the identical problem in one batch: one cold
+    factorization, the duplicate served as a cache hit, identical bits."""
+    f = _folds(seed=3)
+    bk = CountingBackend(ReferenceBackend())
+    srv = CVSweepServer(_strat(), backend=bk, config=ServerConfig())
+    srv.submit(SweepRequest("t0", f, LAMS))
+    srv.submit(SweepRequest("t1", f, LAMS))
+    resps = srv.drain()
+    assert sorted(r.status for r in resps) == ["hit", "miss"]
+    assert bk.n_cholesky > 0                      # the one cold factorization
+    by_status = {r.status: r for r in resps}
+    assert by_status["miss"].result.n_exact_chol == _strat().n_exact_chol(
+        f.fold_hess.shape[0], LAMS.shape[0])
+    assert by_status["hit"].result.n_exact_chol == 0
+    np.testing.assert_array_equal(resps[0].result.errors,
+                                  resps[1].result.errors)
+
+
+def test_admission_groups_by_geometry():
+    """Different anchor ranges (and fold geometries) are admitted into
+    separate groups — each dispatch is one compatible batch."""
+    f = _folds(seed=1)
+    srv = _server(max_batch=8)
+    srv.submit(SweepRequest("a", f, LAMS))
+    srv.submit(SweepRequest("b", f, SHIFTED))
+    srv.submit(SweepRequest("c", f, LAMS2))     # same anchors as "a"
+    assert len(srv._queues) == 2
+    first = srv.step()
+    assert {r.tenant for r in first} == {"a", "c"}   # one fused dispatch
+    assert all(r.batch_size == 2 for r in first)
+    second = srv.step()
+    assert [r.tenant for r in second] == ["b"]
+    assert srv.pending == 0
+
+
+def test_fifo_across_groups():
+    """The group whose head request is oldest is served first."""
+    f = _folds(seed=1)
+    srv = _server()
+    srv.submit(SweepRequest("early", f, SHIFTED))
+    srv.submit(SweepRequest("late", f, LAMS))
+    assert [r.tenant for r in srv.step()] == ["early"]
+
+
+# ------------------------------------- cross-tenant sharing (satellite 4)
+
+
+def test_identical_hessians_share_across_tenants_zero_chol():
+    """Two tenants, byte-identical Hessians, different λ grids over the
+    same decades: the second tenant's request is served warm with ZERO new
+    factorizations."""
+    f1 = _folds(seed=5)
+    f2 = _folds(seed=5)           # rebuilt → different arrays, same bytes
+    np.testing.assert_array_equal(f1.hess, f2.hess)
+    bk = CountingBackend(ReferenceBackend())
+    srv = CVSweepServer(_strat(), backend=bk, config=ServerConfig())
+    srv.submit(SweepRequest("alice", f1, LAMS))
+    srv.drain()
+    cold = bk.n_cholesky
+    srv.submit(SweepRequest("bob", f2, LAMS2))
+    (resp,) = srv.drain()
+    assert resp.status in ("hit", "refit")
+    assert bk.n_cholesky == cold                 # zero new factorizations
+    assert srv.cache.tenant_stats["bob"]["hits"] == 1
+    assert srv.cache.hit_rate("bob") == 1.0
+    np.testing.assert_array_equal(resp.result.errors,
+                                  _solo(f2, LAMS2).errors)
+
+
+def test_perturbed_hessian_misses():
+    """A tenant whose design is perturbed at 1e-9 must MISS — content
+    addressing, not identity, decides sharing."""
+    base = _folds(seed=6)
+    pert = _folds(seed=6, jitter=1e-9)
+    assert not np.array_equal(base.hess, pert.hess)
+    srv = _server()
+    srv.submit(SweepRequest("a", base, LAMS))
+    srv.submit(SweepRequest("b", pert, LAMS))
+    resps = {r.tenant: r for r in srv.drain()}
+    assert resps["a"].status == "miss" and resps["b"].status == "miss"
+    assert srv.cache.tenant_stats["b"]["hits"] == 0
+    np.testing.assert_array_equal(resps["b"].result.errors,
+                                  _solo(pert, LAMS).errors)
+
+
+def test_no_stale_reads_under_eviction_pressure():
+    """LRU pressure (budget ≈ 2 entries, 4 distinct problems × 2 tenants)
+    must never serve a stale entry: every response still equals its solo
+    cold sweep bit-for-bit."""
+    problems = [_folds(seed=s) for s in (10, 11, 12, 13)]
+    one = _server()
+    one.submit(SweepRequest("size", problems[0], LAMS))
+    one.drain()
+    entry_bytes = next(iter(one.cache.entries.values())).nbytes
+
+    srv = CVSweepServer(_strat(), config=ServerConfig(
+        max_batch=2, cache_bytes=2 * entry_bytes + entry_bytes // 2))
+    for round_ in range(2):
+        for i, f in enumerate(problems):
+            srv.submit(SweepRequest(f"t{i % 2}", f, LAMS))
+        for resp in srv.drain():
+            pass
+    assert srv.cache.evictions > 0
+    # replay the whole mix once more and check bits against solo refs
+    refs = [_solo(f, LAMS).errors for f in problems]
+    for i, f in enumerate(problems):
+        srv.submit(SweepRequest("probe", f, LAMS))
+    for resp, ref in zip(srv.drain(), refs):
+        np.testing.assert_array_equal(resp.result.errors, ref)
+
+
+# ----------------------------------------------------------- isolation
+
+
+def test_per_tenant_response_isolation():
+    f = _folds(seed=1)
+    srv = _server(max_batch=4)
+    for t in ("a", "b", "a"):
+        srv.submit(SweepRequest(t, f, LAMS))
+    srv.drain()
+    got_a = srv.take_responses("a")
+    got_b = srv.take_responses("b")
+    assert len(got_a) == 2 and all(r.tenant == "a" for r in got_a)
+    assert len(got_b) == 1 and got_b[0].tenant == "b"
+    assert srv.take_responses("a") == []        # popped, not peeked
+    assert srv.take_responses("nobody") == []
+
+
+def test_tenant_stats_partition_sums_to_global():
+    cfg = TrafficConfig(n_requests=18, n_tenants=3, n_problems=3,
+                        h=12, n=96)
+    srv = _server(max_batch=6)
+    for req in make_traffic(cfg):
+        srv.submit(req)
+    srv.drain()
+    st = srv.stats
+    assert st["served"] == 18
+    assert sum(t["hits"] for t in st["tenants"].values()) == \
+        st["cache"]["hits"]
+    assert sum(t["misses"] for t in st["tenants"].values()) == \
+        st["cache"]["misses"]
+    assert srv.cache.hit_rate() > 0
+    assert sum(1 for t in st["tenants"].values() if t["hits"]) >= 2
+
+
+# ------------------------------------------------------ engine run_batch
+
+
+def test_run_batch_falls_back_on_mixed_geometry():
+    """Incompatible fold shapes degrade to per-problem runs — same
+    results, no stacked dispatch."""
+    fa, fc = _folds(seed=1), _folds(seed=2, h=12, n=96)
+    eng = engine.CVEngine(_strat(), cache=factor_cache.FactorCache(),
+                          reuse="covering", cache_anchors=True)
+    res = eng.run_batch([(fa, LAMS), (fc, LAMS)], tenants=["a", "c"])
+    for r, (f, l) in zip(res, [(fa, LAMS), (fc, LAMS)]):
+        assert "batch" not in r.extras["engine"]
+        np.testing.assert_array_equal(r.errors, _solo(f, l).errors)
+    assert set(eng.cache.tenant_stats) == {"a", "c"}
+
+
+def test_run_batch_requires_matching_tenants():
+    f = _folds(seed=1)
+    eng = engine.CVEngine(_strat(), cache=factor_cache.FactorCache())
+    with pytest.raises(ValueError, match="tenant"):
+        eng.run_batch([(f, LAMS)], tenants=["a", "b"])
+    assert eng.run_batch([]) == []
+
+
+def test_run_batch_without_cache_falls_back():
+    f = _folds(seed=1)
+    eng = engine.CVEngine(_strat())
+    (r,) = eng.run_batch([(f, LAMS)])
+    np.testing.assert_array_equal(
+        r.errors, engine.CVEngine(_strat()).run(f, LAMS).errors)
