@@ -12,6 +12,8 @@ Everything measured here is also emitted machine-readably to
 ``BENCH_table3.json`` at the repo root (schema ``bench_table3/v1``) so the
 perf trajectory is recorded across PRs; ``REPRO_BENCH_SMOKE=1`` re-emits
 the same schema on tiny problems for CI."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -295,6 +297,104 @@ def _precision_sweep(h: int, q: int, chunk: int) -> dict:
     return rec
 
 
+def _autotune_record(h: int, k: int, q: int) -> dict:
+    """Roofline-guided autotuner record (PR-7 tentpole): predicted vs
+    measured wall time for every candidate of a small (block × λ-chunk)
+    lattice, on one fp32 ridge problem.
+
+    The tuner's whole value proposition is *compile-time* selection — every
+    candidate is AOT-lowered and scored against the roofline model, nothing
+    executes — so this record closes the loop by actually RUNNING each
+    candidate afterwards and checking the prediction against the stopwatch:
+
+    * ``tuned_vs_default``     — measured default-config time over measured
+      chosen-config time.  The default is always in the lattice and wins
+      predicted ties, so this ratio is ≥ 1.0 by construction when the tuner
+      keeps the default and must be ≥ 1.0 in measurement for the choice to
+      have been worth making (enforced non-smoke by
+      ``scripts/check_bench_schema.py``).  When the tuner keeps the default
+      the two entries share one measurement and the ratio is exactly 1.0.
+    * ``chosen_rank_measured`` — the chosen config's rank (0 = fastest) in
+      the measured ordering of all candidates; the schema checker requires
+      top-2 non-smoke, i.e. the static roofline score ranks the lattice
+      about as well as running everything would have.
+    * ``cache_hit_second_tune`` — re-tuning the same geometry must be a
+      content-addressed :class:`~repro.distributed.autotune.TuningCache`
+      hit with ZERO new lowerings.
+    * ``argmin_match``         — tuning changes tiling/chunking, never
+      math: the tuned sweep must select the same λ* as the default sweep.
+
+    Mesh shapes are pinned to ``[None]`` (the bench container is
+    single-device); the mesh dimension of the lattice is exercised by
+    ``tests/test_autotune.py`` under the 4-virtual-device test topology.
+    """
+    from repro.distributed import autotune
+    from repro.distributed import roofline as rl
+
+    x, y = ridge_problem(h)
+    x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+    folds = cv.make_folds(x, y, k)
+    block = max(16, min(64, h // 8))
+    lams = jnp.logspace(-3, 2, q, dtype=jnp.float32)
+    blocks = (block, 2 * block) if SMOKE else (16, 32, 64)
+    lattice = dict(blocks=blocks, mesh_shapes=[None])
+    hw = rl.detect_hw()
+    eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4, block=block),
+                          donate=False)
+
+    tcache = autotune.TuningCache()
+    t0 = time.perf_counter()
+    chosen = autotune.tune(eng, folds, lams, cache=tcache, hw=hw, **lattice)
+    tune_s = time.perf_counter() - t0
+    n_low = tcache.lowerings
+    again = autotune.tune(eng, folds, lams, cache=tcache, hw=hw, **lattice)
+    cache_hit = bool(again.source == "cache" and tcache.lowerings == n_low)
+
+    default = autotune.default_config(eng, k, h, q, jnp.float32)
+    cands = autotune.candidate_lattice(
+        h=h, k=k, q=q, n_devices=len(jax.devices()), default=default,
+        store_dtype=jnp.float32, budget=engine.LAM_CHUNK_BUDGET_BYTES,
+        **lattice)
+    scored = autotune.score_candidates(eng, folds, lams, cands, hw=hw)
+
+    # close the loop: run every candidate (warm — one compile pass, then
+    # median) and rank the tuner's compile-time choice by the stopwatch
+    repeats = 1 if SMOKE else 5
+    measured = {}
+    for cand in scored:
+        derived = eng._apply_tuned(cand)
+        measured[cand.key()] = timeit(lambda: derived.run(folds, lams),
+                                      repeats=repeats, warmup=1)
+    t_default = measured[default.key()]
+    t_chosen = measured[chosen.key()]
+    rank = sorted(measured.values()).index(t_chosen)
+
+    r_default = eng._apply_tuned(default).run(folds, lams)
+    r_tuned = eng._apply_tuned(chosen).run(folds, lams)
+
+    rec = {
+        "h": h, "k": k, "q": q, "hw": hw.name,
+        "lattice": {"blocks": list(blocks), "mesh_shapes": ["none"]},
+        "n_candidates": len(scored),
+        "lowerings": n_low,
+        "tune_s": tune_s,
+        "cache_hit_second_tune": cache_hit,
+        "candidates": [dict(c.to_json(), measured_s=measured[c.key()])
+                       for c in scored],
+        "chosen": dict(chosen.to_json(), measured_s=t_chosen),
+        "default": dict(default.to_json(), measured_s=t_default),
+        "tuned_vs_default": t_default / t_chosen,
+        "chosen_rank_measured": rank,
+        "argmin_match": bool(float(r_tuned.best_lam)
+                             == float(r_default.best_lam)),
+    }
+    emit(f"table3_autotune_h{h}_q{q}", t_chosen,
+         f"tuned_vs_default={rec['tuned_vs_default']:.2f}x "
+         f"rank={rank}/{len(scored)} lowerings={n_low} "
+         f"cache_hit={cache_hit} tune_s={tune_s:.2f}")
+    return rec
+
+
 def run():
     if SMOKE:
         sizes, sweep_h, qs, chunk = [32], 32, [10, 25], 4
@@ -315,6 +415,10 @@ def run():
     # precision sweep at the ISSUE-5 acceptance point (h=512, the paper's
     # q=31 grid, fixed chunk so the memory ratio is the dtype ratio)
     ps_args = (32, 10, 4) if SMOKE else (512, 31, 8)
+    # autotune at a mid size: big enough that block choice is real
+    # wall-clock, small enough that measuring every lattice candidate
+    # stays harness-sized
+    at_args = (32, 4, 8) if SMOKE else (256, 5, 64)
     record = {
         "schema": "bench_table3/v1",
         "smoke": SMOKE,
@@ -325,6 +429,7 @@ def run():
         "warm_vs_cold": _warm_vs_cold(wc_h, wc_qs, chunk),
         "overlap_vs_serial": _overlap_vs_serial(*ov_args),
         "precision_sweep": _precision_sweep(*ps_args),
+        "autotune": _autotune_record(*at_args),
     }
     emit_json("BENCH_table3.json", record)
     return record

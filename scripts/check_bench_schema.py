@@ -48,6 +48,25 @@ PRECISION_POLICY_KEYS = {"cold_s", "state_bytes", "replay_temp_bytes",
 PRECISION_MIN_SPEEDUP = 1.3
 PRECISION_MIN_MEM_RATIO = 1.9
 
+AUTOTUNE_KEYS = {"h", "k", "q", "hw", "lattice", "n_candidates",
+                 "lowerings", "tune_s", "cache_hit_second_tune",
+                 "candidates", "chosen", "default", "tuned_vs_default",
+                 "chosen_rank_measured", "argmin_match"}
+
+AUTOTUNE_CONFIG_KEYS = {"block", "lam_chunk", "mesh_shape", "predicted_s",
+                        "source", "measured_s"}
+
+#: ISSUE-7 acceptance floors for the committed (non-smoke) record: the
+#: roofline-chosen config must measure no slower than the default
+#: (tuned_vs_default ≥ 1.0 — choosing the default itself is a legal
+#: verdict and scores exactly 1.0), must land in the top-2 of the
+#: measured candidate ordering (the static score ranks the lattice about
+#: as well as running everything would), must change selection never math
+#: (argmin parity with the default sweep), and re-tuning the same
+#: geometry must be a pure cache hit.
+AUTOTUNE_MIN_TUNED_VS_DEFAULT = 1.0
+AUTOTUNE_MAX_CHOSEN_RANK = 1
+
 
 def check_table3(path: pathlib.Path) -> list[str]:
     errors = []
@@ -55,7 +74,7 @@ def check_table3(path: pathlib.Path) -> list[str]:
     if rec.get("schema") != "bench_table3/v1":
         errors.append(f"schema: expected bench_table3/v1, got {rec.get('schema')!r}")
     for key in ("sizes", "sweep_scaling", "warm_vs_cold", "overlap_vs_serial",
-                "precision_sweep", "jax_backend", "x64", "smoke"):
+                "precision_sweep", "autotune", "jax_backend", "x64", "smoke"):
         if key not in rec:
             errors.append(f"missing top-level key {key!r}")
     for h, times in rec.get("sizes", {}).items():
@@ -146,6 +165,48 @@ def check_table3(path: pathlib.Path) -> list[str]:
                 f"({ps['speedup_bf16_store']:.3f}x) nor the "
                 f"{PRECISION_MIN_MEM_RATIO}x memory floor "
                 f"({ps['mem_ratio_bf16_store']:.3f}x)")
+    at = rec.get("autotune", {})
+    missing = AUTOTUNE_KEYS - at.keys()
+    if missing:
+        errors.append(f"autotune missing {sorted(missing)}")
+    else:
+        for label, cfg in (("chosen", at["chosen"]),
+                           ("default", at["default"]),
+                           *((f"candidates[{i}]", c)
+                             for i, c in enumerate(at["candidates"]))):
+            cm = AUTOTUNE_CONFIG_KEYS - cfg.keys()
+            if cm:
+                errors.append(f"autotune.{label} missing {sorted(cm)}")
+        if not at["candidates"]:
+            errors.append("autotune.candidates is empty")
+        if at["lowerings"] < at["n_candidates"]:
+            errors.append(
+                f"autotune: only {at['lowerings']} lowerings for "
+                f"{at['n_candidates']} candidates — scoring is no longer "
+                "one AOT lowering per candidate")
+        # correctness halves are scale-independent: enforced in smoke too
+        if not at["cache_hit_second_tune"]:
+            errors.append(
+                "autotune: re-tuning the same geometry was not a tuning-"
+                "cache hit (content-addressed reuse is the cache contract)")
+        if not at["argmin_match"]:
+            errors.append(
+                "autotune: tuned sweep selected a different λ* than the "
+                "default sweep (tuning must change tiling, never math)")
+        # perf floors are properties of the committed benchmark host;
+        # smoke shrinks the problem to schema-validation scale
+        if not rec.get("smoke"):
+            if at["tuned_vs_default"] < AUTOTUNE_MIN_TUNED_VS_DEFAULT:
+                errors.append(
+                    f"autotune: tuned config measured "
+                    f"{at['tuned_vs_default']:.3f}x vs default — the "
+                    f"roofline choice made the sweep SLOWER (floor: "
+                    f"{AUTOTUNE_MIN_TUNED_VS_DEFAULT}x)")
+            if at["chosen_rank_measured"] > AUTOTUNE_MAX_CHOSEN_RANK:
+                errors.append(
+                    f"autotune: chosen config ranks "
+                    f"{at['chosen_rank_measured']} in the measured ordering "
+                    f"(floor: top-{AUTOTUNE_MAX_CHOSEN_RANK + 1})")
     return errors
 
 

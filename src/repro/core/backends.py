@@ -41,7 +41,8 @@ from .precision import PRESETS, PrecisionLike, PrecisionPolicy, \
     resolve_precision
 
 __all__ = ["LinalgBackend", "ReferenceBackend", "PallasBackend",
-           "CountingBackend", "resolve_backend", "BackendLike"]
+           "CountingBackend", "resolve_backend", "retile_backend",
+           "BackendLike"]
 
 
 class LinalgBackend:
@@ -375,8 +376,32 @@ class CountingBackend(LinalgBackend):
 BackendLike = Union[None, str, LinalgBackend]
 
 
+def retile_backend(bk: LinalgBackend, *, chol_block: int | None = None,
+                   trsm_block: int | None = None) -> LinalgBackend:
+    """``bk`` with the given Pallas kernel tile sizes (the autotuner's
+    block dimension).  Backends without kernel tiles (reference) are
+    returned unchanged; a :class:`CountingBackend` is re-wrapped around
+    its retiled inner backend **sharing the same counters** — retiling
+    must never fork the counts a test is holding a reference to."""
+    if chol_block is None and trsm_block is None:
+        return bk
+    if isinstance(bk, CountingBackend):
+        inner = retile_backend(bk.inner, chol_block=chol_block,
+                               trsm_block=trsm_block)
+        if inner is bk.inner:
+            return bk
+        return CountingBackend(inner, _shared_counts=bk.by_stage)
+    if isinstance(bk, PallasBackend):
+        return dataclasses.replace(
+            bk, chol_block=chol_block or bk.chol_block,
+            trsm_block=trsm_block or bk.trsm_block)
+    return bk
+
+
 def resolve_backend(backend: BackendLike = None, *,
                     block: int | None = None,
+                    chol_block: int | None = None,
+                    trsm_block: int | None = None,
                     precision: PrecisionLike = None) -> LinalgBackend:
     """Map a ``backend=`` argument to a concrete :class:`LinalgBackend`.
 
@@ -384,9 +409,12 @@ def resolve_backend(backend: BackendLike = None, *,
     (``chol_block`` and ``trsm_block``) from the one value callers use as
     their packing-layout block — so small test problems get proportionate
     interpret-mode kernels and the pack/unpack layout never disagrees with
-    the compute tiles.  The packed-domain kernels take their tile size from
-    the data's own layout block (:class:`~repro.core.packing.PackedFactor`),
-    which is consistent by construction.
+    the compute tiles.  ``chol_block`` / ``trsm_block`` override the tiles
+    individually (the autotuner's chosen kernel tiles; they also re-tile a
+    backend *instance* via :func:`retile_backend`).  The packed-domain
+    kernels take their tile size from the data's own layout block
+    (:class:`~repro.core.packing.PackedFactor`), which is consistent by
+    construction.
 
     ``precision`` attaches a :class:`~repro.core.precision.PrecisionPolicy`
     (name, policy object, or ``None`` = the environment default).  A
@@ -398,16 +426,19 @@ def resolve_backend(backend: BackendLike = None, *,
         if precision is not None:
             pol = resolve_precision(precision)
             if pol != backend.precision:
-                return backend.with_precision(pol)
-        return backend
+                backend = backend.with_precision(pol)
+        return retile_backend(backend, chol_block=chol_block,
+                              trsm_block=trsm_block)
     pol = resolve_precision(precision)
     if backend is None or backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "reference"
     if backend in ("reference", "ref", "jnp"):
         return ReferenceBackend(precision=pol)
     if backend == "pallas":
-        if block is not None:
-            return PallasBackend(chol_block=block, trsm_block=block,
+        cb = chol_block or block
+        tb = trsm_block or block
+        if cb is not None or tb is not None:
+            return PallasBackend(chol_block=cb or 256, trsm_block=tb or 256,
                                  precision=pol)
         return PallasBackend(precision=pol)
     raise ValueError(f"unknown backend {backend!r}; expected 'auto', "

@@ -518,6 +518,27 @@ class CVEngine:
                *instance* is passed without ``precision``, the backend's
                own policy is adopted — one policy per pipeline, resolved
                once.
+    tune:      roofline-guided compile-time autotuning
+               (:mod:`repro.distributed.autotune`).  ``False`` (default)
+               runs the configured block / λ-chunk / mesh as-is.
+               ``'auto'`` searches the legal configuration lattice on the
+               first sweep of each problem geometry — every candidate is
+               AOT-lowered and scored against the roofline model; nothing
+               executes — and runs the predicted-fastest configuration
+               (kernel tiles, packing block, λ-chunk and mesh shape all
+               follow the choice).  A
+               :class:`~repro.distributed.autotune.TunedConfig` pins a
+               previously chosen configuration.  Tuning never changes
+               *what* is computed — only tiling, chunking and layout —
+               and a repeat geometry hits the content-addressed
+               ``tune_cache`` without re-lowering anything.
+    tune_cache: a :class:`~repro.distributed.autotune.TuningCache` shared
+               across engines (the serving layer passes one per server);
+               ``None`` with ``tune='auto'`` creates a private one.
+    tune_lattice: optional lattice overrides forwarded to
+               :func:`~repro.distributed.autotune.tune` (``blocks=``,
+               ``chunks=``, ``mesh_shapes=``, ``hw=``) — benches and
+               tests shrink the search with this.
     """
 
     strategy: Union[CVStrategy, str]
@@ -530,6 +551,9 @@ class CVEngine:
     reuse: Union[bool, str] = "exact"
     cache_anchors: bool = False
     precision: PrecisionLike = None
+    tune: Any = False
+    tune_cache: Optional[Any] = None
+    tune_lattice: Optional[dict] = None
 
     def __post_init__(self):
         if isinstance(self.strategy, str):
@@ -539,9 +563,14 @@ class CVEngine:
         if self.reuse not in (False, "exact", "covering"):
             raise ValueError(f"reuse must be 'exact', 'covering' or False; "
                              f"got {self.reuse!r}")
+        if self.tune not in (False, "auto") \
+                and type(self.tune).__name__ != "TunedConfig":
+            raise ValueError(f"tune must be False, 'auto' or a TunedConfig; "
+                             f"got {self.tune!r}")
         self._bk = resolve_backend(self.backend, block=self.block,
                                    precision=self.precision)
         self._prec = self._bk.precision   # one policy per pipeline
+        self._tuned_engines: dict = {}    # TunedConfig.key() -> derived engine
         if self.donate is None:
             self.donate = jax.default_backend() != "cpu"
         self._sweeps: dict = {}   # mesh-key -> jitted fused sweep fn
@@ -599,6 +628,72 @@ class CVEngine:
         if chunk <= 0:
             raise ValueError(f"lam_chunk must be positive, got {chunk}")
         return chunk
+
+    # -- roofline-guided autotuning ---------------------------------------
+    #
+    # tune='auto' inserts one step before the first sweep of a geometry:
+    # the autotuner AOT-lowers the fused sweep for every point of the legal
+    # (block × λ-chunk × mesh) lattice, scores the compiled HLO against the
+    # roofline model, and the engine delegates the actual run to a DERIVED
+    # engine carrying the winning configuration.  The derived engine is a
+    # full CVEngine (same strategy math, same cache, tune=False) so every
+    # path — run, the pipelined sweep, batched admission — works tuned
+    # without per-path plumbing; it is memoized per chosen config so its
+    # jit caches warm up exactly like an untuned engine's.
+
+    def _apply_tuned(self, cfg) -> "CVEngine":
+        """The derived engine that *runs* a tuned configuration: strategy
+        packing block and Pallas kernel tiles re-sized to ``cfg.block``,
+        λ-chunk pinned, mesh built from ``cfg.mesh_shape`` (reusing this
+        engine's explicit mesh when the shape matches, so jit caches keyed
+        on device identity survive).  Shares the factor cache and the
+        precision policy; ``tune=False`` on the result is the recursion
+        guard."""
+        key = cfg.key()
+        if key in self._tuned_engines:
+            return self._tuned_engines[key]
+        from .backends import retile_backend
+        strat = self.strategy
+        if dataclasses.is_dataclass(strat) and any(
+                f.name == "block" for f in dataclasses.fields(strat)) \
+                and strat.block != cfg.block:
+            strat = dataclasses.replace(strat, block=cfg.block)
+        bk = retile_backend(self._bk, chol_block=cfg.block,
+                            trsm_block=cfg.block)
+        if cfg.mesh_shape is None:
+            mesh = None
+        else:
+            n_fold, n_lam = cfg.mesh_shape
+            if isinstance(self.mesh, Mesh) and \
+                    (self.mesh.shape.get(shardlib.CV_FOLD_AXIS),
+                     self.mesh.shape.get(shardlib.CV_LAM_AXIS)) == \
+                    (n_fold, n_lam):
+                mesh = self.mesh
+            else:
+                dev = np.asarray(
+                    jax.devices()[: n_fold * n_lam]).reshape(n_fold, n_lam)
+                mesh = Mesh(dev, (shardlib.CV_FOLD_AXIS, shardlib.CV_LAM_AXIS))
+        derived = CVEngine(
+            strategy=strat, backend=bk, mesh=mesh, donate=self.donate,
+            block=cfg.block, lam_chunk=int(cfg.lam_chunk), cache=self.cache,
+            reuse=self.reuse, cache_anchors=self.cache_anchors,
+            tune=False, tune_cache=self.tune_cache)
+        self._tuned_engines[key] = derived
+        return derived
+
+    def _tuned_engine(self, folds: FoldData, lams):
+        """(derived engine, chosen config) for this problem geometry —
+        the tune dispatch shared by every public entry point."""
+        from repro.distributed import autotune
+        if isinstance(self.tune, autotune.TunedConfig):
+            cfg = self.tune
+        else:
+            if self.tune_cache is None:
+                self.tune_cache = autotune.TuningCache()
+            cfg = autotune.tune(self, folds, jnp.asarray(lams),
+                                cache=self.tune_cache,
+                                **(self.tune_lattice or {}))
+        return self._apply_tuned(cfg), cfg
 
     # -- sweep construction ----------------------------------------------
 
@@ -968,6 +1063,12 @@ class CVEngine:
         if stop_patience < 1:
             raise ValueError(
                 f"stop_patience must be >= 1, got {stop_patience}")
+        if self.tune:
+            derived, _ = self._tuned_engine(folds, lams)
+            yield from derived.sweep_async(
+                folds, lams, stop_tol=stop_tol, stop_patience=stop_patience,
+                pipelined=pipelined)
+            return
         lams = jnp.asarray(lams)
         lams_np = np.asarray(lams)
         k = folds.fold_hess.shape[0]
@@ -1096,6 +1197,13 @@ class CVEngine:
         and whether it stopped); without it this is the staged equivalent
         of :meth:`run`.
         """
+        if self.tune:
+            derived, cfg = self._tuned_engine(folds, lams)
+            res = derived.run_async(folds, lams, stop_tol=stop_tol,
+                                    stop_patience=stop_patience,
+                                    pipelined=pipelined)
+            res.extras["engine"]["tune"] = cfg.to_json()
+            return res
         parts = list(self.sweep_async(folds, lams, stop_tol=stop_tol,
                                       stop_patience=stop_patience,
                                       pipelined=pipelined))
@@ -1212,6 +1320,11 @@ class CVEngine:
         return errs, info, n_chol
 
     def run(self, folds: FoldData, lams: jax.Array) -> CVResult:
+        if self.tune:
+            derived, cfg = self._tuned_engine(folds, lams)
+            res = derived.run(folds, lams)
+            res.extras["engine"]["tune"] = cfg.to_json()
+            return res
         lams = jnp.asarray(lams)
         k = folds.fold_hess.shape[0]
         q = lams.shape[0]
@@ -1294,6 +1407,14 @@ class CVEngine:
                              f"{len(problems)} problems")
         if not problems:
             return []
+        if self.tune:
+            # admission groups share a geometry (the server's admission
+            # key), so one tune on the batch head covers the batch
+            derived, cfg = self._tuned_engine(*problems[0])
+            results = derived.run_batch(problems, tenants=tenants)
+            for r in results:
+                r.extras["engine"]["tune"] = cfg.to_json()
+            return results
         strat = self.strategy
         metas = [strat.cache_meta(l) if hasattr(strat, "cache_meta") else None
                  for _, l in problems]

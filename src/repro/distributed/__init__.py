@@ -1,2 +1,3 @@
 from .context import MeshCtx  # noqa: F401
 from . import sharding  # noqa: F401
+from . import autotune  # noqa: F401

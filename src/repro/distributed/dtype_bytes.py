@@ -1,0 +1,24 @@
+"""One HLO-dtype → itemsize table shared by every HLO-text cost walker.
+
+``hlo_cost.py`` (the loop-aware walker) and ``roofline.py`` (the
+collective-bytes parser) both parse shapes like ``bf16[128,256]`` out of
+compiled HLO text.  They used to carry private copies of this table, and
+the copies drifted: the roofline parser was missing the fp8 / 4-bit /
+token entries, so collective wire bytes silently dropped fp8 shapes.
+One definition, imported by both, so a dtype added for one walker is
+priced by the other too.
+
+Sub-byte types (``s4``/``u4``) are priced at their *storage* granularity
+(1 byte — XLA packs two nibbles per byte only in late layout passes, and
+a conservative over-count keeps the memory term honest).  ``token`` is a
+pure ordering artifact and moves no bytes.
+"""
+from __future__ import annotations
+
+__all__ = ["DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}

@@ -21,13 +21,9 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HloCost"]
+from .dtype_bytes import DTYPE_BYTES as _DTYPE_BYTES
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+__all__ = ["analyze_hlo", "HloCost"]
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(
@@ -158,7 +154,12 @@ def analyze_hlo(text: str) -> HloCost:
     def _param_touch_bytes(cname: str) -> Dict[int, int]:
         """Per-parameter actually-touched bytes inside a fused computation:
         a parameter consumed ONLY through dynamic-slice/slice reads only the
-        slice, not the stacked array (lax.scan xs access pattern)."""
+        slice, not the stacked array (lax.scan xs access pattern, and the
+        per-tile reads of a packed factor).  Zero-cost view ops (bitcast,
+        reshape) between the parameter and the slice are looked through —
+        XLA routinely emits ``bitcast(param) → slice`` for tiled layouts,
+        and charging the full array per tile inflates the memory term by
+        O(n_tiles)."""
         out: Dict[int, int] = {}
         if cname not in comps:
             return out
@@ -170,8 +171,21 @@ def analyze_hlo(text: str) -> HloCost:
                 if m:
                     pname_by_idx[ins.name] = int(m.group(1))
         for pname, idx in pname_by_idx.items():
+            # alias set: the parameter plus every pure-view op chained off it
+            aliases = {pname}
+            grew = True
+            while grew:
+                grew = False
+                for i in instrs:
+                    if (i.op in ("bitcast", "reshape") and i.name not in aliases
+                            and aliases & set(
+                                _ARGS_RE.findall(i.rest.split("), ", 1)[0]))):
+                        aliases.add(i.name)
+                        grew = True
             uses = [i for i in instrs
-                    if pname in _ARGS_RE.findall(i.rest.split("), ", 1)[0])]
+                    if i.name not in aliases
+                    and aliases & set(_ARGS_RE.findall(
+                        i.rest.split("), ", 1)[0]))]
             if uses and all(u.op in ("dynamic-slice", "slice") for u in uses):
                 out[idx] = sum(_type_bytes(u.type_str) for u in uses)
         return out

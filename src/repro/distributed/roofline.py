@@ -4,36 +4,113 @@ compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
 memory term     = HLO_bytes / (chips × HBM_bw)
 collective term = wire_bytes_per_chip / link_bw
 
-FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
-parsed from the post-SPMD HLO text (shapes there are per-device), with ring
-wire formulas per op:
+FLOPs/bytes come from the loop-aware HLO walker (:mod:`.hlo_cost`);
+collective bytes are parsed from the post-SPMD HLO text (shapes there are
+per-device), with ring wire formulas per op:
   all-reduce      2(g−1)/g × result
   all-gather      (g−1)/g × result
   reduce-scatter  (g−1)   × result        (operand = g × result)
   all-to-all      (g−1)/g × result
   collective-permute       result
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+Hardware constants are an :class:`HW` dataclass, not module globals: the
+autotuner ranks candidate configurations by these terms, so scoring a CPU
+container against TPU v5e numbers would rank against the wrong machine.
+:func:`detect_hw` picks a per-platform preset from
+``jax.devices()[0].platform`` (``cpu`` / ``gpu`` / ``tpu``); the
+``REPRO_HW`` env var forces a preset by name, and
+``REPRO_HW_PEAK_FLOPS`` / ``REPRO_HW_HBM_BW`` / ``REPRO_HW_LINK_BW``
+(plus ``REPRO_HW_CACHE_BW`` / ``REPRO_HW_CACHE_BYTES`` for the
+cache-aware memory term) override individual terms (calibrating against
+a measured machine).  The
+module-level ``PEAK_FLOPS`` / ``HBM_BW`` / ``LINK_BW`` constants remain
+the TPU v5e preset for backward compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 from typing import Dict, List, Optional
 
-__all__ = ["HW", "collective_bytes", "roofline", "Roofline"]
+from .dtype_bytes import DTYPE_BYTES as _DTYPE_BYTES
+
+__all__ = ["HW", "HW_PRESETS", "detect_hw", "collective_bytes", "roofline",
+           "Roofline"]
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 
-HW = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, link_bw=LINK_BW)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """Peak rates the three roofline terms divide by (per chip).
+
+    ``cache_bw`` / ``cache_bytes`` turn on the cache-aware memory term
+    (Ilic et al.'s cache-aware roofline): when the executable's static
+    working set (``temp_size_in_bytes``) fits the last-level cache the
+    memory term divides by ``cache_bw``; past it, the effective bandwidth
+    blends toward ``hbm_bw`` in proportion to the spilled fraction.  Both
+    ``None`` (the default) keeps the classic flat-``hbm_bw`` model.
+    """
+
+    name: str
+    peak_flops: float   # FLOP/s
+    hbm_bw: float       # bytes/s to HBM (or host RAM on CPU)
+    link_bw: float      # bytes/s per inter-chip link
+    cache_bw: Optional[float] = None     # bytes/s from last-level cache
+    cache_bytes: Optional[float] = None  # last-level cache capacity
+
+
+#: Per-platform presets keyed by ``jax.devices()[0].platform``.  tpu is
+#: v5e (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI link); gpu is an
+#: A100-80GB-class part (312 TFLOP/s bf16, 2.0 TB/s HBM, 300 GB/s NVLink);
+#: cpu is a deliberately rough server-class estimate — on CPU the tuner
+#: only needs the *relative* ordering of candidates, and all candidates
+#: share the platform.  Only the cpu preset models the cache hierarchy
+#: (~30 MB LLC at ~8× DRAM bandwidth): on CPU the candidates' total
+#: flops/bytes are nearly flat and *locality* — whether the λ-chunk ×
+#: packed-factor working set stays cache-resident — is what actually
+#: separates their wall time; the accelerator presets keep the classic
+#: HBM-only term (VMEM-sized tiles are the kernels' own contract).
+HW_PRESETS = {
+    "tpu": HW(name="tpu-v5e", peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW,
+              link_bw=LINK_BW),
+    "gpu": HW(name="gpu-a100", peak_flops=312e12, hbm_bw=2.0e12,
+              link_bw=300e9),
+    "cpu": HW(name="cpu", peak_flops=1e11, hbm_bw=5e10, link_bw=2.5e10,
+              cache_bw=4e11, cache_bytes=3e7),
 }
+
+
+def detect_hw() -> HW:
+    """The :class:`HW` for this process: ``REPRO_HW`` preset override if
+    set, else the preset for the default jax platform (cpu fallback for
+    unknown platforms), with per-term ``REPRO_HW_*`` numeric overrides
+    applied on top."""
+    name = os.environ.get("REPRO_HW", "").strip().lower()
+    if name:
+        if name not in HW_PRESETS:
+            raise ValueError(f"REPRO_HW={name!r}: no such preset; "
+                             f"have {sorted(HW_PRESETS)}")
+        hw = HW_PRESETS[name]
+    else:
+        import jax
+        hw = HW_PRESETS.get(jax.devices()[0].platform, HW_PRESETS["cpu"])
+    overrides = {}
+    for field, env in (("peak_flops", "REPRO_HW_PEAK_FLOPS"),
+                       ("hbm_bw", "REPRO_HW_HBM_BW"),
+                       ("link_bw", "REPRO_HW_LINK_BW"),
+                       ("cache_bw", "REPRO_HW_CACHE_BW"),
+                       ("cache_bytes", "REPRO_HW_CACHE_BYTES")):
+        val = os.environ.get(env)
+        if val:
+            overrides[field] = float(val)
+    if overrides:
+        hw = dataclasses.replace(hw, name=hw.name + "+env", **overrides)
+    return hw
+
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
@@ -73,7 +150,6 @@ def _group_size(line: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Per-device wire bytes by collective kind (ring formulas)."""
     out: Dict[str, float] = {}
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:
@@ -106,18 +182,39 @@ class Roofline:
     wire_bytes: float            # per-device collective wire bytes
     by_collective: Dict[str, float]
     chips: int
+    hw: Optional[HW] = None      # None = detect for this process
+    temp_bytes: Optional[float] = None  # static working set (temp buffers)
+
+    def __post_init__(self):
+        if self.hw is None:
+            self.hw = detect_hw()
 
     @property
     def compute_s(self) -> float:
-        return self.flops / PEAK_FLOPS
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def effective_bw(self) -> float:
+        """Bandwidth the memory term divides by: ``hbm_bw`` flat unless the
+        HW models a cache AND the executable's working set is known — then
+        cache-resident working sets stream at ``cache_bw`` and spilled ones
+        blend toward ``hbm_bw`` by the spilled fraction."""
+        hw = self.hw
+        if (hw.cache_bw is None or hw.cache_bytes is None
+                or not self.temp_bytes):
+            return hw.hbm_bw
+        if self.temp_bytes <= hw.cache_bytes:
+            return hw.cache_bw
+        resident = hw.cache_bytes / self.temp_bytes
+        return resident * hw.cache_bw + (1.0 - resident) * hw.hbm_bw
 
     @property
     def memory_s(self) -> float:
-        return self.hbm_bytes / HBM_BW
+        return self.hbm_bytes / self.effective_bw
 
     @property
     def collective_s(self) -> float:
-        return self.wire_bytes / LINK_BW
+        return self.wire_bytes / self.hw.link_bw
 
     @property
     def bottleneck(self) -> str:
@@ -137,23 +234,33 @@ class Roofline:
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "step_s": self.step_s,
             "bottleneck": self.bottleneck,
             "by_collective": self.by_collective,
+            "hw": self.hw.name,
+            "temp_bytes_per_device": self.temp_bytes,
+            "effective_bw": self.effective_bw,
         }
 
 
-def roofline(compiled, chips: int) -> Roofline:
+def roofline(compiled, chips: int, hw: Optional[HW] = None) -> Roofline:
     """Three roofline terms from the compiled artifact.
 
     Uses the loop-aware HLO walker (hlo_cost) rather than
     ``compiled.cost_analysis()`` because the latter counts while-loop
-    (lax.scan layer stack) bodies exactly once — see EXPERIMENTS.md §Roofline
-    for the calibration.  All values are per-device.
+    (lax.scan layer stack / lax.map λ-chunk stream) bodies exactly once —
+    see EXPERIMENTS.md §Roofline for the calibration.  All values are
+    per-device; ``hw=None`` detects the platform preset.
     """
     from . import hlo_cost
 
     text = compiled.as_text()
     cost = hlo_cost.analyze_hlo(text)
+    temp = None
+    try:
+        temp = float(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backends without memory_analysis
+        pass
     return Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
                     wire_bytes=cost.wire_bytes, by_collective=dict(cost.wire),
-                    chips=chips)
+                    chips=chips, hw=hw, temp_bytes=temp)

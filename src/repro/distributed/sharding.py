@@ -19,6 +19,7 @@ from repro.models.params import Spec
 
 __all__ = ["spec_pspec", "param_pspecs", "param_shardings", "data_pspec",
            "CV_FOLD_AXIS", "CV_LAM_AXIS", "make_cv_mesh", "cv_axis_sizes",
+           "mesh_shape_candidates",
            "pad_to_multiple", "chunk_lams", "auto_lam_chunk",
            "cv_state_specs", "cv_chunk_in_specs", "StageRing"]
 
@@ -81,6 +82,20 @@ def cv_axis_sizes(k: int, n_devices: int) -> Tuple[int, int]:
     """
     n_fold = math.gcd(k, n_devices)
     return n_fold, n_devices // n_fold
+
+
+def mesh_shape_candidates(k: int, n_devices: int) -> list:
+    """Every legal (n_fold, n_lam) mesh shape for ``k`` folds on
+    ``n_devices`` devices: all factorizations ``n_fold · n_lam ==
+    n_devices`` whose fold axis divides ``k`` (folds cannot be padded; the
+    λ grid can).  This is the mesh dimension of the autotuner's candidate
+    lattice — :func:`cv_axis_sizes` picks one member (the gcd heuristic),
+    the tuner scores them all."""
+    out = []
+    for n_fold in range(1, n_devices + 1):
+        if n_devices % n_fold == 0 and k % n_fold == 0:
+            out.append((n_fold, n_devices // n_fold))
+    return out
 
 
 def make_cv_mesh(k: int, devices: Optional[Sequence[jax.Device]] = None) -> Mesh:

@@ -89,6 +89,14 @@ class ServerConfig:
     cache_anchors: also cache packed anchor factors, enabling the
                  zero-factorization refit path across tenants.
     lam_chunk:   λ-chunk policy forwarded to the engines.
+    tune:        ``tune=`` forwarded to every pooled engine (``'auto'``
+                 turns on roofline-guided autotuning).  All engines share
+                 ONE :class:`~repro.distributed.autotune.TuningCache`, and
+                 the tuning key is content-addressed over the problem
+                 geometry — so each admission-group geometry is tuned
+                 exactly once per server, however many tenants share it.
+    tune_lattice: lattice overrides forwarded to the engines (benches and
+                 tests shrink the candidate search with this).
     """
 
     max_batch: int = 8
@@ -96,6 +104,8 @@ class ServerConfig:
     cache_bytes: Optional[int] = None
     cache_anchors: bool = True
     lam_chunk: object = "auto"
+    tune: object = False
+    tune_lattice: Optional[dict] = None
 
 
 class CVSweepServer:
@@ -111,6 +121,11 @@ class CVSweepServer:
         self._backend = backend
         self._default_precision = resolve_precision(precision).name
         self.cache = cachelib.FactorCache(max_bytes=self.config.cache_bytes)
+        # one tuning cache per server: content-addressed over geometry, so
+        # each admission-group geometry is tuned once and every pooled
+        # engine (and every tenant) reuses the verdict
+        from repro.distributed import autotune
+        self.tune_cache = autotune.TuningCache()
         self._engines: Dict[str, CVEngine] = {}
         # admission key -> FIFO of pending requests
         self._queues: Dict[tuple, Deque[SweepRequest]] = \
@@ -133,7 +148,9 @@ class CVSweepServer:
                 precision=name, cache=self.cache,
                 reuse=self.config.reuse,
                 cache_anchors=self.config.cache_anchors,
-                lam_chunk=self.config.lam_chunk)
+                lam_chunk=self.config.lam_chunk,
+                tune=self.config.tune, tune_cache=self.tune_cache,
+                tune_lattice=self.config.tune_lattice)
         return self._engines[name]
 
     # -- admission --------------------------------------------------------
@@ -223,5 +240,6 @@ class CVSweepServer:
                                 if self.dispatches else 0.0),
                     engines=sorted(self._engines),
                     cache=self.cache.stats,
+                    tuning=self.tune_cache.stats,
                     tenants={t: dict(rec)
                              for t, rec in self.cache.tenant_stats.items()})
