@@ -67,6 +67,23 @@ AUTOTUNE_CONFIG_KEYS = {"block", "lam_chunk", "mesh_shape", "predicted_s",
 AUTOTUNE_MIN_TUNED_VS_DEFAULT = 1.0
 AUTOTUNE_MAX_CHOSEN_RANK = 1
 
+SEARCH_KEYS = {"h", "k", "q", "wave", "tol_decades", "dense_s", "search_s",
+               "waves", "lams_evaluated", "evals_vs_grid",
+               "interval_decades", "stopped_on", "best_lam_dense",
+               "best_lam_search", "lam_gap_decades", "lam_agree",
+               "selection"}
+
+SEARCH_SELECTION_KEYS = {"degree", "basis", "anchor_status",
+                         "chol_calls_warm"}
+
+#: ISSUE-8 acceptance floors for the committed (non-smoke) record: the
+#: adaptive search must recover the dense grid's λ* within its interval
+#: tolerance + one dense-grid step (``lam_agree``) while spending at most
+#: HALF the dense grid's λ evaluations.  The self-tuning half —
+#: interpolant selection against cached anchor targets factorizes
+#: NOTHING — is scale-independent and enforced in smoke mode too.
+SEARCH_MAX_EVALS_VS_GRID = 0.5
+
 
 def check_table3(path: pathlib.Path) -> list[str]:
     errors = []
@@ -74,7 +91,8 @@ def check_table3(path: pathlib.Path) -> list[str]:
     if rec.get("schema") != "bench_table3/v1":
         errors.append(f"schema: expected bench_table3/v1, got {rec.get('schema')!r}")
     for key in ("sizes", "sweep_scaling", "warm_vs_cold", "overlap_vs_serial",
-                "precision_sweep", "autotune", "jax_backend", "x64", "smoke"):
+                "precision_sweep", "autotune", "adaptive_search",
+                "jax_backend", "x64", "smoke"):
         if key not in rec:
             errors.append(f"missing top-level key {key!r}")
     for h, times in rec.get("sizes", {}).items():
@@ -207,6 +225,41 @@ def check_table3(path: pathlib.Path) -> list[str]:
                     f"autotune: chosen config ranks "
                     f"{at['chosen_rank_measured']} in the measured ordering "
                     f"(floor: top-{AUTOTUNE_MAX_CHOSEN_RANK + 1})")
+    se = rec.get("adaptive_search", {})
+    missing = SEARCH_KEYS - se.keys()
+    if missing:
+        errors.append(f"adaptive_search missing {sorted(missing)}")
+    else:
+        sm = SEARCH_SELECTION_KEYS - se["selection"].keys()
+        if sm:
+            errors.append(f"adaptive_search.selection missing {sorted(sm)}")
+        elif se["selection"]["chol_calls_warm"] != 0:
+            errors.append(
+                f"adaptive_search.selection: "
+                f"{se['selection']['chol_calls_warm']} cholesky calls "
+                "during selection against a warm anchor cache (the "
+                "zero-factorization contract)")
+        if se["lams_evaluated"] >= se["q"]:
+            errors.append(
+                f"adaptive_search: {se['lams_evaluated']} evaluations for "
+                f"a q={se['q']} dense grid — the search never saved a "
+                "single solve")
+        # perf/agreement floors are properties of the committed grid
+        # density on the benchmark host; smoke shrinks the problem to
+        # schema-validation scale
+        if not rec.get("smoke"):
+            if se["evals_vs_grid"] > SEARCH_MAX_EVALS_VS_GRID:
+                errors.append(
+                    f"adaptive_search: evals_vs_grid "
+                    f"{se['evals_vs_grid']:.3f} above the "
+                    f"{SEARCH_MAX_EVALS_VS_GRID} acceptance ceiling")
+            if not se["lam_agree"]:
+                errors.append(
+                    f"adaptive_search: search λ* "
+                    f"{se['best_lam_search']:.4g} missed the dense grid's "
+                    f"{se['best_lam_dense']:.4g} by "
+                    f"{se['lam_gap_decades']:.3f} decades (tolerance: "
+                    f"tol_decades + one grid step)")
     return errors
 
 

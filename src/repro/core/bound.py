@@ -18,7 +18,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["m_operator", "taylor_factor", "remainder_r", "picholesky_bound"]
+__all__ = ["m_operator", "taylor_factor", "remainder_r", "picholesky_bound",
+           "anchor_advisor"]
 
 
 import functools
@@ -102,6 +103,47 @@ def remainder_r(a: jax.Array, lo: float, hi: float, n_grid: int = 9) -> jax.Arra
 
     grid = jnp.linspace(lo, hi, n_grid)
     return jnp.max(jnp.stack([term(s) for s in grid]))
+
+
+def anchor_advisor(a: jax.Array, anchors, n_grid: int = 5) -> dict:
+    """Where is the interpolant weakest, and where should the next anchor go?
+
+    Scores every adjacent-anchor interval ``[λ_i, λ_{i+1}]`` with the local
+    Thm 4.4 error shape ``γ_i³ · R_[λ_i, λ_{i+1}]`` (γ_i the interval
+    half-width; ``R`` from :func:`remainder_r` evaluated on ``n_grid``
+    shifts inside the interval) and proposes the *log-midpoint* of the
+    worst interval as the next anchor — anchors are log-spaced, so the
+    log-midpoint is the split that halves the interval in the metric the
+    grid lives in.
+
+    ``a`` must be small (d ≲ 48 — ``M`` is d²×d²); callers with production-
+    sized Hessians pass a leading principal submatrix as a probe (see
+    :meth:`~repro.core.engine.CVEngine.advise_anchor`).
+
+    Returns ``dict(intervals=[(lo, hi)...], scores=[...], worst=index,
+    proposal=float)``.
+    """
+    import numpy as np
+
+    arr = np.sort(np.asarray(anchors, dtype=float).ravel())
+    if arr.shape[0] < 2:
+        raise ValueError(f"need at least 2 anchors to score intervals, "
+                         f"got {arr.shape[0]}")
+    if np.any(arr <= 0):
+        raise ValueError("anchor advisor works over log-λ: "
+                         "anchors must be positive")
+    intervals = list(zip(arr[:-1], arr[1:]))
+    scores = []
+    for lo, hi in intervals:
+        gamma = 0.5 * (hi - lo)
+        r = float(remainder_r(a, float(lo), float(hi), n_grid=n_grid))
+        scores.append(gamma**3 * r)
+    worst = int(np.argmax(scores))
+    lo, hi = intervals[worst]
+    proposal = float(10.0 ** (0.5 * (np.log10(lo) + np.log10(hi))))
+    return dict(intervals=[(float(lo), float(hi)) for lo, hi in intervals],
+                scores=[float(s) for s in scores], worst=worst,
+                proposal=proposal)
 
 
 def picholesky_bound(a: jax.Array, sample_lams: jax.Array, lam_c: float,

@@ -579,6 +579,8 @@ class CVEngine:
         self._chunks: dict = {}   # mesh-key -> jitted per-chunk errors fn
         self._fold_states: dict = {}   # with_anchors -> jitted 1-fold state fn
         self._prepare = None      # jitted replicated prepare stage
+        self._interp_engines: dict = {}  # (degree, basis) -> derived engine
+        self._anchor_targets = None      # jitted anchor-factorize stage
         self._split = jax.jit(
             lambda hess, grad, fh, fg: (hess[None] - fh, grad[None] - fg))
 
@@ -607,6 +609,35 @@ class CVEngine:
             raise ValueError(
                 f"{k} folds not divisible by mesh axis "
                 f"{shardlib.CV_FOLD_AXIS}={n_fold}")
+
+    # -- λ-grid validation -------------------------------------------------
+
+    @staticmethod
+    def _check_lams(lams, min_q: int = 1, what: str = "sweep") -> jax.Array:
+        """Validate a λ grid at the engine's entry points.
+
+        Degenerate grids used to die deep inside the machinery with opaque
+        shape errors (``q=0`` in ``pad_to_multiple``/``reshape``, an
+        ``IndexError`` on an empty chunk stream) — fail here instead, with
+        a message naming the actual problem.  ``q=1`` is legal for a sweep
+        (one λ, trivially) but not for :meth:`search` (``min_q=2`` — a
+        bracketing search needs a range).
+        """
+        lams = jnp.asarray(lams)
+        if lams.ndim != 1:
+            raise ValueError(
+                f"λ grid must be 1-D, got shape {tuple(lams.shape)}")
+        q = int(lams.shape[0])
+        if q == 0:
+            raise ValueError(
+                f"empty λ grid (q=0): the {what} needs at least "
+                f"{min_q} candidate λ value(s)")
+        if q < min_q:
+            raise ValueError(
+                f"λ grid has {q} value(s) but the {what} needs at least "
+                f"{min_q} (a single λ defines no range to refine — "
+                "use run() for a point evaluation)")
+        return lams
 
     # -- λ chunking --------------------------------------------------------
 
@@ -1019,6 +1050,47 @@ class CVEngine:
             self._states[key] = jax.jit(statef)
         return self._states[key]
 
+    def _staged_state_for(self, mesh, h_tr, g_tr, folds: FoldData, lams,
+                          pipelined: bool):
+        """State stage of the staged sweep, cache dispatch included —
+        shared by :meth:`sweep_async` and :meth:`search` so the two λ
+        streams acquire their fitted state identically (fingerprint →
+        hit | anchor refit | cold populate) and can never drift.
+
+        Returns ``(batched state, aux, warm, cache_info)``.
+        """
+        strat, bk = self.strategy, self._bk
+        meta = (strat.cache_meta(lams)
+                if self.cache is not None and hasattr(strat, "cache_meta")
+                else None)
+        aux: Any = ()
+        warm = False
+        if meta is not None:
+            key = cachelib.make_key(
+                h_tr, meta["anchors"], block=meta["params"]["block"],
+                backend=bk.name, params=meta["params"],
+                precision=self._prec.descriptor())
+
+            def cold_state(with_anchors):
+                state, pf, _ = self._pipelined_state(
+                    mesh, h_tr, g_tr, folds, lams, with_anchors, pipelined)
+                return state, pf
+
+            entry, status = self._acquire_cached_state(meta, key, cold_state)
+            state = entry.state
+            warm = status != "miss"
+            cache_info = dict(status=status, digest=entry.key.digest()[:12],
+                              policy=self.reuse, **self.cache.stats)
+            # replay contract: fold_errors of a cacheable strategy never
+            # reads aux, so the chunk stage streams with aux=() on both the
+            # warm and the just-populated cold path
+        else:
+            state, _, aux = self._pipelined_state(
+                mesh, h_tr, g_tr, folds, lams, False, pipelined)
+            cache_info = (None if self.cache is None
+                          else dict(status="bypass"))
+        return state, aux, warm, cache_info
+
     def sweep_async(self, folds: FoldData, lams: jax.Array, *,
                     stop_tol: Optional[float] = None, stop_patience: int = 2,
                     pipelined: bool = True) -> Iterator[SweepChunk]:
@@ -1069,7 +1141,7 @@ class CVEngine:
                 folds, lams, stop_tol=stop_tol, stop_patience=stop_patience,
                 pipelined=pipelined)
             return
-        lams = jnp.asarray(lams)
+        lams = self._check_lams(lams)
         lams_np = np.asarray(lams)
         k = folds.fold_hess.shape[0]
         q = int(lams.shape[0])
@@ -1078,7 +1150,7 @@ class CVEngine:
         self._check_fold_axis(mesh, k)
         h_tr, g_tr = self._split(folds.hess, folds.grad,
                                  folds.fold_hess, folds.fold_grad)
-        strat, bk = self.strategy, self._bk
+        strat = self.strategy
 
         # fixed-size chunk schedule (last chunk edge-padded) so one jitted
         # chunk stage serves the whole stream
@@ -1091,35 +1163,8 @@ class CVEngine:
         n_c = chunks.shape[0]
 
         # ---- state stage (cache dispatch identical to run()) ------------
-        meta = (strat.cache_meta(lams)
-                if self.cache is not None and hasattr(strat, "cache_meta")
-                else None)
-        aux: Any = ()
-        warm = False
-        if meta is not None:
-            key = cachelib.make_key(
-                h_tr, meta["anchors"], block=meta["params"]["block"],
-                backend=bk.name, params=meta["params"],
-                precision=self._prec.descriptor())
-
-            def cold_state(with_anchors):
-                state, pf, _ = self._pipelined_state(
-                    mesh, h_tr, g_tr, folds, lams, with_anchors, pipelined)
-                return state, pf
-
-            entry, status = self._acquire_cached_state(meta, key, cold_state)
-            state = entry.state
-            warm = status != "miss"
-            cache_info = dict(status=status, digest=entry.key.digest()[:12],
-                              policy=self.reuse, **self.cache.stats)
-            # replay contract: fold_errors of a cacheable strategy never
-            # reads aux, so the chunk stage streams with aux=() on both the
-            # warm and the just-populated cold path
-        else:
-            state, _, aux = self._pipelined_state(
-                mesh, h_tr, g_tr, folds, lams, False, pipelined)
-            cache_info = (None if self.cache is None
-                          else dict(status="bypass"))
+        state, aux, warm, cache_info = self._staged_state_for(
+            mesh, h_tr, g_tr, folds, lams, pipelined)
 
         # ---- λ-chunk stream ---------------------------------------------
         f_idx = jnp.arange(k)
@@ -1186,6 +1231,17 @@ class CVEngine:
                 cache=cache_info)
             if stopped:
                 return
+        if not np.isfinite(best):
+            # the FINISHED stream ranked no finite λ (every chunk's mean
+            # was NaN/inf — e.g. a singular fold poisons every λ).  With
+            # early stopping this already raised mid-stream; without it the
+            # old behavior was to silently yield best_lam=nan.  Refuse the
+            # same way: the consumer has seen every partial curve by now,
+            # but the sweep as a whole produced nothing rankable.
+            raise FloatingPointError(
+                "sweep finished with no finite hold-out mean at any λ "
+                "(singular fold? overflow → try precision='bf16_refined' "
+                "or fp64); refusing to report a nan λ* selection")
 
     def run_async(self, folds: FoldData, lams: jax.Array, *,
                   stop_tol: Optional[float] = None, stop_patience: int = 2,
@@ -1224,6 +1280,341 @@ class CVEngine:
             lams_evaluated=int(errors.shape[0]))
         return CVResult.from_errors(lams_eval, errors, last.n_exact_chol,
                                     engine=meta)
+
+    # -- adaptive λ-search -------------------------------------------------
+    #
+    # The dense grid spends one interp_solve per grid point whether or not
+    # the point is informative; the search spends them where the hold-out
+    # minimum actually is.  It reuses the staged sweep's machinery whole:
+    # the state stage (cache dispatch included) runs ONCE over the grid's
+    # λ range, then fixed-width refinement waves stream through the same
+    # jitted chunk stage `sweep_async` uses — every wave has the same shape,
+    # so the whole search compiles exactly one chunk signature, no matter
+    # how many refinement levels it takes.
+
+    def search(self, folds: FoldData, lams: jax.Array, *,
+               wave: Optional[int] = None, tol_decades: float = 0.05,
+               plateau_tol: Optional[float] = None,
+               plateau_patience: int = 2, max_waves: int = 32,
+               select_interp: bool = False,
+               pipelined: bool = True) -> CVResult:
+        """Adaptive λ-refinement search over the grid's range.
+
+        Drop-in for :meth:`run`: takes the same dense candidate grid, but
+        only its *range* (and density, as the comparison baseline) matter —
+        instead of evaluating all q points, the search covers [λ_min,
+        λ_max] with one coarse log-spaced wave of ``wave`` points, then
+        repeatedly places ``wave`` new points strictly inside the bracket
+        formed by the evaluated neighbors of the running minimum
+        (trisection generalized to a batched wave: each level shrinks the
+        bracket by ≈ 2/(wave+1)).  On a unimodal hold-out curve the final
+        bracket contains the dense grid's argmin, so the returned λ* agrees
+        with it to within the bracket width.
+
+        Parameters
+        ----------
+        wave:         λ points per dispatch wave (default: the engine's
+                      resolved λ-chunk, capped to 8, floored at 3 — every
+                      wave reuses one jitted chunk-stage signature).  With
+                      a mesh, padded up to the λ-axis multiple.
+        tol_decades:  stop when the bracket around the minimum is narrower
+                      than this many log₁₀-decades (default 0.05).
+        plateau_tol:  optional error-plateau stop: after
+                      ``plateau_patience`` consecutive waves in which the
+                      best error improved by less than
+                      ``best · plateau_tol`` (relative), stop.  ``None``
+                      (default) disables it — interval width terminates.
+        max_waves:    hard cap on refinement waves.
+        select_interp: run :meth:`select_interpolant` first and search with
+                      the chosen (degree, basis) — on a warm anchor cache
+                      the selection performs zero factorizations; the
+                      choice is recorded under
+                      ``extras['engine']['interp_selection']``.
+
+        A wave whose mean hold-out error is non-finite at *every* point
+        raises ``FloatingPointError`` (same refusal as the early-stop
+        sweep); partially-finite waves rank the finite points only.
+
+        Composes unchanged with the cache (the state stage is acquired
+        exactly like :meth:`sweep_async`: hit → zero factorizations, anchor
+        refit, or cold populate *before* any wave runs), precision
+        policies, mesh sharding, and ``tune='auto'``.  Returns a
+        :class:`CVResult` over every evaluated λ (sorted), with the search
+        trace under ``extras['engine']['search']``.
+        """
+        if tol_decades <= 0:
+            raise ValueError(f"tol_decades must be > 0, got {tol_decades}")
+        if plateau_tol is not None and plateau_tol < 0:
+            raise ValueError(
+                f"plateau_tol must be >= 0 or None, got {plateau_tol}")
+        if plateau_patience < 1:
+            raise ValueError(
+                f"plateau_patience must be >= 1, got {plateau_patience}")
+        if max_waves < 1:
+            raise ValueError(f"max_waves must be >= 1, got {max_waves}")
+        if self.tune:
+            derived, cfg = self._tuned_engine(folds, lams)
+            res = derived.search(
+                folds, lams, wave=wave, tol_decades=tol_decades,
+                plateau_tol=plateau_tol, plateau_patience=plateau_patience,
+                max_waves=max_waves, select_interp=select_interp,
+                pipelined=pipelined)
+            res.extras["engine"]["tune"] = cfg.to_json()
+            return res
+        if select_interp:
+            sel = self.select_interpolant(folds, lams)
+            eng = self.with_interpolant(sel["degree"], sel["basis"])
+            res = eng.search(
+                folds, lams, wave=wave, tol_decades=tol_decades,
+                plateau_tol=plateau_tol, plateau_patience=plateau_patience,
+                max_waves=max_waves, select_interp=False,
+                pipelined=pipelined)
+            res.extras["engine"]["interp_selection"] = sel
+            return res
+        lams = self._check_lams(lams, min_q=2, what="adaptive λ-search")
+        lams_np = np.asarray(lams)
+        if np.any(lams_np <= 0):
+            raise ValueError("adaptive λ-search refines over log-λ: "
+                             "every grid value must be positive")
+        k = folds.fold_hess.shape[0]
+        q = int(lams.shape[0])
+        h = folds.fold_hess.shape[-1]
+        mesh = self._resolve_mesh(k)
+        self._check_fold_axis(mesh, k)
+        h_tr, g_tr = self._split(folds.hess, folds.grad,
+                                 folds.fold_hess, folds.fold_grad)
+        strat = self.strategy
+
+        chunk = self._resolve_chunk(q, h, h_tr.dtype)
+        if wave is None:
+            w = max(3, min(8, chunk if chunk else 8))
+        else:
+            w = int(wave)
+            if w < 3:
+                raise ValueError(
+                    f"wave must be >= 3 (a refinement wave needs interior "
+                    f"points on both sides of the minimum), got {w}")
+        if mesh is not None:
+            w += (-w) % mesh.shape[shardlib.CV_LAM_AXIS]
+
+        # state stage once, over the full λ range — identical cache
+        # dispatch to sweep_async / run (hit → zero factorizations here)
+        state, aux, warm, cache_info = self._staged_state_for(
+            mesh, h_tr, g_tr, folds, lams, pipelined)
+
+        f_idx = jnp.arange(k)
+        chunk_fn = self._chunk_errors_fn(mesh)
+        dtype = lams.dtype
+
+        def eval_wave(xs):
+            """Mean hold-out error at 10**xs — one fixed-shape dispatch."""
+            lam_w = np.asarray(10.0 ** xs, dtype=dtype)
+            with self._stage_scope("fold_errors"):
+                e = chunk_fn(state, f_idx, h_tr, g_tr, folds.x_folds,
+                             folds.y_folds, jnp.asarray(lam_w), aux)
+            return lam_w, np.asarray(e).mean(0)
+
+        lo = float(np.log10(lams_np.min()))
+        hi = float(np.log10(lams_np.max()))
+        xs_all = np.empty(0)
+        lams_all = np.empty(0, dtype=lams_np.dtype)
+        errs_all = np.empty(0)
+        best = np.inf
+        best_x = lo
+        waves = 0
+        streak = 0
+        width = hi - lo
+        stopped_on = "max_waves"
+        next_xs = np.linspace(lo, hi, w)    # coarse wave spans the range
+        while True:
+            lam_w, mean = eval_wave(next_xs)
+            waves += 1
+            finite = np.isfinite(mean)
+            if not finite.any():
+                raise FloatingPointError(
+                    f"adaptive λ-search wave {waves} produced no finite "
+                    f"hold-out mean (λ∈[{lam_w.min():.3g}, "
+                    f"{lam_w.max():.3g}]): cannot rank the bracket "
+                    "(singular fold? overflow → 'bf16_refined'/fp64)")
+            xs_all = np.concatenate([xs_all, next_xs])
+            lams_all = np.concatenate([lams_all, lam_w])
+            errs_all = np.concatenate([errs_all, mean])
+            prev_best = best
+            j = int(np.flatnonzero(finite)[np.argmin(mean[finite])])
+            if mean[j] < best:
+                best = float(mean[j])
+                best_x = float(next_xs[j])
+            improved = (bool(best < prev_best * (1.0 - plateau_tol))
+                        if plateau_tol is not None and np.isfinite(prev_best)
+                        else bool(best < prev_best))
+            streak = 0 if improved else streak + 1
+            # bracket: the evaluated neighbors of the running minimum
+            order = np.argsort(xs_all)
+            xs_sorted = xs_all[order]
+            pos = int(np.searchsorted(xs_sorted, best_x))
+            left = xs_sorted[pos - 1] if pos > 0 else xs_sorted[0]
+            right = (xs_sorted[pos + 1] if pos + 1 < xs_sorted.shape[0]
+                     else xs_sorted[-1])
+            width = float(right - left)
+            if width <= tol_decades:
+                stopped_on = "interval"
+                break
+            if plateau_tol is not None and streak >= plateau_patience:
+                stopped_on = "plateau"
+                break
+            if waves >= max_waves:
+                break
+            # next wave: w points strictly inside the bracket (log-spaced;
+            # the endpoints are already evaluated, so nothing repeats)
+            next_xs = np.linspace(left, right, w + 2)[1:-1]
+
+        order = np.argsort(xs_all)
+        n_eval = int(xs_all.shape[0])
+        n_chol = 0 if warm else strat.n_exact_chol(k, n_eval)
+        meta = dict(
+            strategy=strat.name, backend=self._bk.name,
+            precision=self._prec.name,
+            mesh=None if mesh is None else dict(mesh.shape),
+            donated=bool(self.donate), lam_chunk=self.lam_chunk,
+            cache=cache_info)
+        meta["search"] = dict(
+            wave=w, waves=waves, lams_evaluated=n_eval, dense_q=q,
+            evals_vs_grid=n_eval / q, tol_decades=tol_decades,
+            plateau_tol=plateau_tol, plateau_patience=plateau_patience,
+            interval_decades=width, stopped_on=stopped_on)
+        return CVResult.from_errors(lams_all[order], errs_all[order],
+                                    n_chol, engine=meta)
+
+    # -- self-tuning interpolation ----------------------------------------
+
+    def with_interpolant(self, degree: int, basis: str) -> "CVEngine":
+        """Derived engine running this engine's piCholesky strategy at a
+        different (degree, basis) — shares the cache, backend, precision
+        and tuning cache, memoized per choice so its jit caches warm up
+        like any engine's.  Same anchors ⇒ on a cache with
+        ``cache_anchors`` the derived engine's first sweep refits Θ from
+        the cached anchor targets with zero factorizations."""
+        strat = self.strategy
+        if not isinstance(strat, PiCholeskyStrategy):
+            raise ValueError(
+                "with_interpolant needs the picholesky strategy, got "
+                f"{getattr(strat, 'name', strat)!r}")
+        key = (int(degree), str(basis))
+        if key == (strat.degree, strat.basis):
+            return self
+        if key not in self._interp_engines:
+            self._interp_engines[key] = CVEngine(
+                strategy=dataclasses.replace(strat, degree=key[0],
+                                             basis=key[1]),
+                backend=self._bk, mesh=self.mesh, donate=self.donate,
+                block=self.block, lam_chunk=self.lam_chunk,
+                cache=self.cache, reuse=self.reuse,
+                cache_anchors=self.cache_anchors,
+                tune=False, tune_cache=self.tune_cache)
+        return self._interp_engines[key]
+
+    def _anchor_targets_fn(self):
+        """Jitted (k, g, P) anchor-factorize stage for interpolant
+        selection: per fold, Cholesky at each anchor shift, tile-packed."""
+        if self._anchor_targets is None:
+            strat, bk = self.strategy, self._bk
+
+            def targets(h_tr, anchors):
+                def per_fold(h_f):
+                    eye = jnp.eye(h_f.shape[-1], dtype=h_f.dtype)
+                    factors = jax.vmap(
+                        lambda lam: bk.cholesky(h_f + lam * eye))(anchors)
+                    return bk.pack_tril(factors, strat.block)
+                return jax.vmap(per_fold)(h_tr)
+
+            self._anchor_targets = jax.jit(targets)
+        return self._anchor_targets
+
+    def select_interpolant(self, folds: FoldData, lams: jax.Array, *,
+                           degrees=None,
+                           bases=("monomial", "centered")) -> dict:
+        """Choose the interpolant (degree, basis) by leave-one-anchor-out
+        CV against the packed anchor targets
+        (:func:`~repro.core.picholesky.select_interpolant`).
+
+        The anchor targets come from the factor cache when its anchor
+        fingerprint matches (``cache_anchors=`` entries are degree/basis-
+        independent) — **zero factorizations** in that case; otherwise the
+        g anchor factorizations run once here and, with ``cache_anchors``,
+        are parked as an anchors-only cache entry so the sweep that follows
+        (whatever degree won) refits from them without factorizing either.
+        Every candidate score after that is GEMMs only.
+
+        Returns the :func:`~repro.core.picholesky.select_interpolant` dict
+        plus ``anchor_status`` ∈ {'anchors' (cache hit), 'cold',
+        'cold+cached'} and the anchor grid.
+        """
+        strat, bk = self.strategy, self._bk
+        if not isinstance(strat, PiCholeskyStrategy):
+            raise ValueError(
+                "interpolant selection needs the picholesky strategy, got "
+                f"{getattr(strat, 'name', strat)!r}")
+        lams = self._check_lams(lams, min_q=2, what="interpolant selection")
+        anchors = _sample_grid(lams, strat.g)
+        h_tr, _ = self._split(folds.hess, folds.grad,
+                              folds.fold_hess, folds.fold_grad)
+        meta = strat.cache_meta(lams)
+        key = None
+        if self.cache is not None and meta is not None:
+            key = cachelib.make_key(
+                h_tr, meta["anchors"], block=strat.block, backend=bk.name,
+                params=meta["params"], precision=self._prec.descriptor())
+        pf = (self.cache.get_anchors(key)
+              if key is not None and self.reuse else None)
+        status = "anchors"
+        if pf is None:
+            with self._stage_scope("fold_state"):
+                vec = self._anchor_targets_fn()(h_tr, anchors)
+            vec = vec.astype(self._prec.store_dtype(vec.dtype))
+            pf = packing.PackedFactor(vec=vec, h=int(h_tr.shape[-1]),
+                                      block=strat.block)
+            status = "cold"
+            if key is not None and self.cache_anchors:
+                self.cache.put(key, None, pf)   # anchors-only entry
+                status = "cold+cached"
+        sel = picholesky.select_interpolant(jnp.asarray(pf.vec), anchors,
+                                            degrees, bases=bases, backend=bk)
+        sel["anchor_status"] = status
+        sel["g"] = strat.g
+        sel["anchors"] = np.asarray(anchors).tolist()
+        return sel
+
+    def advise_anchor(self, folds: FoldData, lams: jax.Array, *,
+                      probe_dim: int = 32, n_grid: int = 5) -> dict:
+        """Bound-guided anchor placement: score the strategy's anchor
+        intervals with the Thm 4.4 machinery
+        (:func:`~repro.core.bound.anchor_advisor`) and propose the next
+        anchor at the log-midpoint of the weakest interval.
+
+        The bound operators are exact but O(d⁶) (M is d²×d²), so the
+        advisor works on a **probe**: the leading ``probe_dim`` principal
+        submatrix of the fold-mean training Hessian.  That makes the
+        advice a documented heuristic — it guides anchor *placement*,
+        it never enters the sweep math.
+        """
+        strat = self.strategy
+        g = getattr(strat, "g", None)
+        if g is None:
+            raise ValueError(
+                "anchor advice needs an anchored interpolant strategy "
+                f"(with g sample shifts); {getattr(strat, 'name', strat)!r} "
+                "has none")
+        lams = self._check_lams(lams, min_q=2, what="anchor advisor")
+        from . import bound
+        anchors = _sample_grid(lams, g)
+        h_tr, _ = self._split(folds.hess, folds.grad,
+                              folds.fold_hess, folds.fold_grad)
+        d = min(int(probe_dim), int(h_tr.shape[-1]))
+        probe = jnp.mean(h_tr, axis=0)[:d, :d]
+        out = bound.anchor_advisor(probe, np.asarray(anchors), n_grid=n_grid)
+        out["probe_dim"] = d
+        out["anchors"] = np.asarray(anchors).tolist()
+        return out
 
     # -- public API -------------------------------------------------------
 
@@ -1325,7 +1716,7 @@ class CVEngine:
             res = derived.run(folds, lams)
             res.extras["engine"]["tune"] = cfg.to_json()
             return res
-        lams = jnp.asarray(lams)
+        lams = self._check_lams(lams)
         k = folds.fold_hess.shape[0]
         q = lams.shape[0]
         mesh = self._resolve_mesh(k)
@@ -1399,7 +1790,7 @@ class CVEngine:
         gracefully to per-problem :meth:`run` calls (same results, no
         stacked dispatch).
         """
-        problems = [(f, jnp.asarray(l)) for f, l in problems]
+        problems = [(f, self._check_lams(l)) for f, l in problems]
         if tenants is None:
             tenants = [None] * len(problems)
         if len(tenants) != len(problems):

@@ -205,10 +205,17 @@ def _tree_nbytes_at(tree, dtype) -> int:
 @dataclasses.dataclass
 class CacheEntry:
     """One cached fit: the batched-over-folds Θ state, and optionally the
-    per-(fold, λ_s) tile-packed anchor factors that produced it."""
+    per-(fold, λ_s) tile-packed anchor factors that produced it.
+
+    ``state=None`` marks an **anchors-only** entry: the interpolant
+    selection path (:meth:`~repro.core.engine.CVEngine.select_interpolant`)
+    factorizes the anchors before any Θ has been fitted and parks them
+    here so whichever (degree, basis) the caller settles on refits with
+    zero factorizations.  Such entries serve :meth:`FactorCache.get_anchors`
+    but can never satisfy a state ``lookup``."""
 
     key: CacheKey
-    state: picholesky.PiCholesky          # theta (k, r+1, P), center (k,)
+    state: Optional[picholesky.PiCholesky]  # theta (k, r+1, P), center (k,)
     anchors: Optional[packing.PackedFactor] = None   # vec (k, g, P)
     hits: int = 0
     nbytes: int = 0                       # array payload (state + anchors),
@@ -341,11 +348,15 @@ class FactorCache:
             raise ValueError(f"unknown reuse policy {policy!r}; "
                              "expected 'exact' or 'covering'")
         entry = self.entries.get(key.digest())
+        if entry is not None and entry.state is None:
+            entry = None        # anchors-only entry: no Θ to serve
         if entry is None and policy == "covering":
             lo, hi = min(key.anchors), max(key.anchors)
             best_width = None
             for digest in self._by_base.get(key.base_digest(), ()):
                 cand = self.entries[digest]
+                if cand.state is None:
+                    continue    # anchors-only — cannot cover a state read
                 c_lo, c_hi = min(cand.key.anchors), max(cand.key.anchors)
                 if (c_lo <= lo + abs(lo) * COVER_RTOL
                         and hi <= c_hi + abs(c_hi) * COVER_RTOL):
@@ -379,8 +390,14 @@ class FactorCache:
 
     # --------------------------------------------------------------- write
 
-    def put(self, key: CacheKey, state: picholesky.PiCholesky,
+    def put(self, key: CacheKey, state: Optional[picholesky.PiCholesky],
             anchors: Optional[packing.PackedFactor] = None) -> CacheEntry:
+        """Write one entry.  ``state=None`` with ``anchors`` stores an
+        anchors-only entry (served by :meth:`get_anchors` only — the
+        interpolant-selection path's pre-Θ write)."""
+        if state is None and anchors is None:
+            raise ValueError("refusing to cache an empty entry: "
+                             "need a fitted state, packed anchors, or both")
         digest = key.digest()
         nbytes = _tree_nbytes((state, anchors))
         baseline = _tree_nbytes_at((state, anchors), key.dtype)
@@ -448,15 +465,19 @@ class FactorCache:
         index = {"schema": "factor_cache/v1", "entries": []}
         for offset, (digest, e) in enumerate(sorted(self.entries.items())):
             step = base + offset
-            tree = {"theta": e.state.theta, "center": e.state.center}
+            tree = {}
+            if e.state is not None:
+                tree["theta"] = e.state.theta
+                tree["center"] = e.state.center
             if e.anchors is not None:
                 tree["anchors_vec"] = e.anchors.vec
             mgr.save(step, tree)
             rec = {
                 "step": step, "digest": digest, "key": e.key.to_json(),
-                "state": {"h": e.state.h, "block": e.state.block,
-                          "theta": self._leaf_spec(e.state.theta),
-                          "center": self._leaf_spec(e.state.center)},
+                "state": None if e.state is None else {
+                    "h": e.state.h, "block": e.state.block,
+                    "theta": self._leaf_spec(e.state.theta),
+                    "center": self._leaf_spec(e.state.center)},
                 "anchors": None if e.anchors is None else {
                     "h": e.anchors.h, "block": e.anchors.block,
                     "vec": self._leaf_spec(e.anchors.vec)},
@@ -498,8 +519,10 @@ class FactorCache:
             if key.digest() != rec["digest"]:
                 continue
             srec = rec["state"]
-            like = {"theta": cls._leaf_like(srec["theta"]),
-                    "center": cls._leaf_like(srec["center"])}
+            like = {}
+            if srec is not None:
+                like["theta"] = cls._leaf_like(srec["theta"])
+                like["center"] = cls._leaf_like(srec["center"])
             arec = rec.get("anchors")
             if arec is not None:
                 like["anchors_vec"] = cls._leaf_like(arec["vec"])
@@ -511,7 +534,7 @@ class FactorCache:
                    or np.asarray(tree[name]).dtype != np.asarray(ref).dtype
                    for name, ref in like.items()):
                 continue     # index/payload mismatch — drop, never mis-serve
-            state = picholesky.PiCholesky(
+            state = None if srec is None else picholesky.PiCholesky(
                 theta=tree["theta"], center=tree["center"],
                 h=int(srec["h"]), block=int(srec["block"]))
             anchors = None

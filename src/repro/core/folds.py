@@ -58,8 +58,28 @@ class CVResult:
 
     @staticmethod
     def from_errors(lams, errors, n_exact, **extras) -> "CVResult":
+        """Rank a hold-out curve into a result.
+
+        The argmin runs over the FINITE entries only — ``np.argmin`` on a
+        partially-NaN curve returns the first NaN's index, which would
+        silently report ``best_lam=nan``.  A curve with *no* finite entry
+        cannot be ranked at all (every λ hit a singular fold / overflow):
+        that raises ``FloatingPointError`` — the same refusal the engine's
+        early-stop search makes mid-stream — instead of returning a
+        ``nan``/``inf`` selection the caller would deploy.
+        """
         lams = np.asarray(lams)
         errors = np.asarray(errors)
-        i = int(np.argmin(errors))
+        if errors.size == 0:
+            raise ValueError("cannot rank an empty hold-out curve "
+                             "(no λ was evaluated)")
+        finite = np.isfinite(errors)
+        if not finite.any():
+            raise FloatingPointError(
+                "hold-out curve has no finite value: every λ produced a "
+                "non-finite mean error (singular fold? overflow → try "
+                "precision='bf16_refined' or fp64); refusing to rank a "
+                "curve that cannot be compared")
+        i = int(np.flatnonzero(finite)[np.argmin(errors[finite])])
         return CVResult(lams, errors, float(lams[i]), float(errors[i]),
                         n_exact, dict(extras))

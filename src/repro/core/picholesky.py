@@ -28,7 +28,8 @@ from . import packing
 from .backends import BackendLike, resolve_backend
 
 __all__ = ["PiCholesky", "fit", "evaluate", "evaluate_packed", "vandermonde",
-           "choose_sample_lambdas", "refine_solutions"]
+           "choose_sample_lambdas", "refine_solutions", "loo_interp_scores",
+           "select_interpolant"]
 
 
 def vandermonde(lams: jax.Array, degree: int, center: float | jax.Array = 0.0) -> jax.Array:
@@ -176,6 +177,111 @@ def fit(
     theta = jnp.linalg.solve(h_lam, g_lam)
     return PiCholesky(theta=theta.astype(store_dtype),
                       center=center.astype(fit_dtype), h=h, block=block)
+
+
+def loo_interp_scores(
+    targets: jax.Array,
+    sample_lams: jax.Array,
+    degrees: Sequence[int],
+    *,
+    bases: Sequence[str] = ("monomial",),
+    backend: BackendLike = "reference",
+) -> dict:
+    """Leave-one-anchor-out CV scores for candidate (degree, basis) pairs.
+
+    ``targets``: tile-packed anchor factors, ``(g, P)`` or batched
+    ``(k, g, P)`` — exactly what :meth:`~repro.core.factor_cache.FactorCache`
+    stores under the anchor digest, so scoring candidates against a warm
+    cache performs **zero factorizations**: each candidate fit is a weighted
+    normal-equations solve on ``g−1`` anchors plus one Horner row at the
+    held-out anchor (GEMMs only, the pyapprox ``cross_validate_pce_degree``
+    idiom transplanted to factor space).
+
+    The score of a candidate is the mean (over anchors and folds) relative
+    Frobenius error of the held-out packed factor prediction.  Candidates
+    need ``g − 1 > degree`` (the reduced fit must still be overdetermined
+    enough to solve); offering a degree that violates this raises.
+
+    Returns ``{(degree, basis): float}``.
+    """
+    t = jnp.asarray(targets)
+    if t.ndim == 2:
+        t = t[None]                                    # (k=1, g, P)
+    lam = jnp.asarray(sample_lams)
+    g = int(lam.shape[0])
+    for r in degrees:
+        if g - 1 <= int(r):
+            raise ValueError(
+                f"leave-one-out selection needs g - 1 > degree: "
+                f"g={g} anchors cannot score degree {r}")
+    bk = resolve_backend(backend)
+    fit_dtype = bk.precision.fit_dtype(t.dtype)
+    t = t.astype(fit_dtype)
+    lam = lam.astype(fit_dtype)
+    eps = jnp.asarray(jnp.finfo(fit_dtype).tiny, fit_dtype)
+    norms = jnp.linalg.norm(t, axis=-1) + eps          # (k, g)
+
+    scores: dict = {}
+    for basis in bases:
+        if basis not in ("monomial", "centered"):
+            raise ValueError(f"unknown basis {basis!r}; "
+                             "expected 'monomial' or 'centered'")
+        center = (jnp.mean(lam) if basis == "centered"
+                  else jnp.zeros((), fit_dtype))
+        for r in degrees:
+            v = vandermonde(lam, int(r), center)       # (g, r+1)
+
+            def loo_err(s):
+                w = (jnp.arange(g) != s).astype(fit_dtype)
+                vw = v * w[:, None]                    # zero the held-out row
+                gram = vw.T @ v                        # (r+1, r+1)
+                rhs = jnp.einsum("gr,kgp->krp", vw, t)
+                theta = jax.vmap(
+                    lambda b: jnp.linalg.solve(gram, b))(rhs)
+                pred = jnp.einsum("r,krp->kp", v[s], theta)
+                return jnp.linalg.norm(pred - t[:, s], axis=-1) / norms[:, s]
+
+            errs = jax.vmap(loo_err)(jnp.arange(g))    # (g, k)
+            scores[(int(r), basis)] = float(jnp.mean(errs))
+    return scores
+
+
+def select_interpolant(
+    targets: jax.Array,
+    sample_lams: jax.Array,
+    degrees: Optional[Sequence[int]] = None,
+    *,
+    bases: Sequence[str] = ("monomial", "centered"),
+    backend: BackendLike = "reference",
+) -> dict:
+    """Choose the interpolant (degree, basis) by :func:`loo_interp_scores`.
+
+    ``degrees=None`` tries every LOO-scorable degree ``1 .. g−2``.  Ties
+    break toward the *lowest* degree (candidates are scored in ascending
+    order and only a strictly better score displaces the incumbent), so
+    exactly-polynomial targets select the generating degree, not an
+    equally-zero-error overfit.
+
+    Returns ``dict(degree=, basis=, score=, scores={'basis/r': float})``.
+    """
+    lam = jnp.asarray(sample_lams)
+    g = int(lam.shape[0])
+    if degrees is None:
+        degrees = tuple(range(1, g - 1))
+    degrees = tuple(int(r) for r in degrees)
+    if not degrees:
+        raise ValueError(f"no candidate degrees to select from "
+                         f"(g={g} anchors admit degrees 1..{g - 2})")
+    scores = loo_interp_scores(targets, lam, degrees, bases=bases,
+                               backend=backend)
+    best_key, best = None, None
+    for basis in bases:                 # stable order: basis-major,
+        for r in degrees:               # ascending degree — ties keep the
+            s = scores[(r, basis)]      # simplest candidate
+            if best is None or s < best:
+                best_key, best = (r, basis), s
+    return dict(degree=best_key[0], basis=best_key[1], score=best,
+                scores={f"{b}/r{r}": s for (r, b), s in scores.items()})
 
 
 def evaluate_packed(model: PiCholesky, lams: jax.Array) -> "packing.PackedFactor":

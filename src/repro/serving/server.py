@@ -51,12 +51,21 @@ __all__ = ["SweepRequest", "SweepResponse", "ServerConfig", "CVSweepServer"]
 @dataclasses.dataclass
 class SweepRequest:
     """One tenant's CV problem: folds, a λ grid, and a precision preset
-    (``None`` = the server's default policy)."""
+    (``None`` = the server's default policy).
+
+    ``mode`` selects how the λ axis is spent: ``'grid'`` (default)
+    evaluates the dense grid through the stacked ``run_batch`` dispatch;
+    ``'search'`` runs the adaptive λ-refinement
+    (:meth:`~repro.core.engine.CVEngine.search`) over the grid's range —
+    far fewer solves to the same λ*, still through the shared factor
+    cache (search requests admit into their own groups: the two modes
+    never fuse)."""
 
     tenant: str
     folds: FoldData
     lams: jax.Array
     precision: Optional[str] = None
+    mode: str = "grid"            # 'grid' | 'search'
     request_id: int = -1          # assigned by the server at submit()
     submitted_at: float = 0.0     # perf_counter timestamp, set at submit()
 
@@ -97,6 +106,10 @@ class ServerConfig:
                  exactly once per server, however many tenants share it.
     tune_lattice: lattice overrides forwarded to the engines (benches and
                  tests shrink the candidate search with this).
+    search_tol:  interval tolerance (log₁₀ decades) for ``mode='search'``
+                 requests (forwarded as ``tol_decades``).
+    search_wave: λ points per refinement wave for ``mode='search'``
+                 requests (``None`` = the engine's chunk-derived default).
     """
 
     max_batch: int = 8
@@ -106,6 +119,8 @@ class ServerConfig:
     lam_chunk: object = "auto"
     tune: object = False
     tune_lattice: Optional[dict] = None
+    search_tol: float = 0.05
+    search_wave: Optional[int] = None
 
 
 class CVSweepServer:
@@ -157,26 +172,44 @@ class CVSweepServer:
 
     def _admission_key(self, req: SweepRequest) -> tuple:
         """Geometry fingerprint two requests must share to ride one
-        stacked dispatch: fold shapes + dtype + anchor set + precision.
-        An unkeyable strategy (no cache meta) gets a singleton group."""
-        eng = self.engine(req.precision)
+        stacked dispatch: mode + fold shapes + dtypes + anchor set +
+        precision.  An unkeyable strategy (no cache meta) gets a
+        singleton group.
+
+        Admission must not mutate server state: the precision preset is
+        validated through ``resolve_precision`` directly — the old code
+        instantiated a pooled engine just to read its policy name, so a
+        *rejected* precision string still left an engine in the pool.
+        The λ-grid dtype is part of the key (it shapes the chunk-stage
+        jit signature, so fusing float32 and float64 grids would recompile
+        per request)."""
+        prec = (resolve_precision(req.precision).name
+                if req.precision is not None else self._default_precision)
+        if req.mode not in ("grid", "search"):
+            raise ValueError(f"mode must be 'grid' or 'search', "
+                             f"got {req.mode!r}")
         meta = (self.strategy.cache_meta(req.lams)
                 if hasattr(self.strategy, "cache_meta") else None)
         if meta is None:
             return ("solo", req.request_id)
         f = req.folds
-        return (tuple(f.fold_hess.shape), tuple(f.x_folds.shape),
+        return (req.mode, tuple(f.fold_hess.shape), tuple(f.x_folds.shape),
                 str(f.fold_hess.dtype),
+                str(np.asarray(req.lams).dtype),
                 tuple(np.asarray(meta["anchors"]).tolist()),
-                eng._prec.name)
+                prec)
 
     def submit(self, req: SweepRequest) -> int:
-        """Enqueue a request; returns its assigned request id."""
+        """Enqueue a request; returns its assigned request id.  Raises
+        (and enqueues nothing, touching no pool state) on an invalid
+        precision preset or mode."""
+        key = self._admission_key(req)     # validates before any mutation
         req.request_id = self._next_id
         self._next_id += 1
         req.submitted_at = time.perf_counter()
-        self._queues.setdefault(self._admission_key(req),
-                                collections.deque()).append(req)
+        if key[0] == "solo":
+            key = ("solo", req.request_id)
+        self._queues.setdefault(key, collections.deque()).append(req)
         return req.request_id
 
     @property
@@ -200,8 +233,20 @@ class CVSweepServer:
             del self._queues[key]
 
         eng = self.engine(batch[0].precision)
-        results = eng.run_batch([(r.folds, r.lams) for r in batch],
-                                tenants=[r.tenant for r in batch])
+        if batch[0].mode == "search":
+            # adaptive λ-refinement: per-request waves (each request's
+            # bracket trajectory is its own), still through the shared
+            # cache — request 1's anchor factorizations serve request 2's
+            # state stage as a hit/refit exactly like grid mode
+            results = []
+            for r in batch:
+                with eng._cache_scope(r.tenant):
+                    results.append(eng.search(
+                        r.folds, r.lams, wave=self.config.search_wave,
+                        tol_decades=self.config.search_tol))
+        else:
+            results = eng.run_batch([(r.folds, r.lams) for r in batch],
+                                    tenants=[r.tenant for r in batch])
         done = time.perf_counter()
         out = []
         for req, res in zip(batch, results):

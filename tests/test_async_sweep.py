@@ -232,13 +232,33 @@ def test_early_stop_refuses_nonfinite_chunk(folds):
     eng = engine.CVEngine(_strat(), lam_chunk=4)
     with pytest.raises(FloatingPointError, match="non-finite"):
         eng.run_async(bad, LAMS, stop_tol=0.0, stop_patience=2)
-    # without early stopping the full grid still streams: the caller sees
-    # the NaN curve, never a silently truncated one
-    r = engine.CVEngine(_strat(), lam_chunk=4).run_async(bad, LAMS)
-    info = r.extras["engine"]["async"]
-    assert not info["stopped"]
-    assert info["lams_evaluated"] == LAMS.size
-    assert not np.isfinite(r.errors).any()
+    # without early stopping the sweep still refuses to RANK the all-NaN
+    # curve (regression: it used to return best_lam=nan silently), but
+    # only after streaming the full grid — the generator yields every
+    # chunk first, so a caller iterating sweep_async sees the whole curve
+    parts = []
+    with pytest.raises(FloatingPointError, match="no finite"):
+        for p in engine.CVEngine(_strat(), lam_chunk=4).sweep_async(
+                bad, LAMS):
+            parts.append(p)
+    assert sum(p.lams.size for p in parts) == LAMS.size
+    assert not np.isfinite(np.concatenate([p.errors for p in parts])).any()
+    with pytest.raises(FloatingPointError, match="no finite"):
+        engine.CVEngine(_strat(), lam_chunk=4).run_async(bad, LAMS)
+
+
+def test_singular_fold_raises_not_nan_selection(folds):
+    """Satellite regression: a fold whose training Hessian is not PD at
+    any grid λ (here: a hold-out block so heavy the training split goes
+    indefinite, the production symptom of a singular/duplicated fold)
+    poisons the fold mean at every λ.  run() and run_async() must raise —
+    never yield ``best_lam=nan``."""
+    sing = folds._replace(fold_hess=folds.fold_hess.at[0].mul(1e6))
+    for run in (lambda e: e.run(sing, LAMS),
+                lambda e: e.run_async(sing, LAMS),
+                lambda e: e.run_async(sing, LAMS, stop_tol=0.0)):
+        with pytest.raises(FloatingPointError):
+            run(engine.CVEngine(_strat(), lam_chunk=4))
 
 
 def test_partial_nonfinite_chunk_tracks_finite_argmin(folds):

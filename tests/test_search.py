@@ -1,0 +1,389 @@
+"""Adaptive λ-refinement search and self-tuning interpolation.
+
+The tentpole contracts live here:
+
+* **selection fidelity** — on the suite's unimodal hold-out curves the
+  search recovers the dense grid's λ* to within the interval tolerance
+  (plus one dense-grid step, the dense argmin's own quantization), using
+  STRICTLY fewer λ evaluations than the dense grid, on both backends,
+  cold and warm;
+* **zero-factorization composition** — a warm cache serves the search's
+  state stage with zero cholesky traces, and interpolant selection
+  against cached anchor targets factorizes nothing;
+* **degenerate-grid refusal** — q=0 and q=1 grids fail fast with typed,
+  descriptive errors at every engine entry point instead of opaque shape
+  errors deep in jit.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bound, engine, factor_cache, picholesky
+from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.core.folds import CVResult
+from repro.testing import strategies as props
+
+
+@pytest.fixture(scope="module")
+def folds():
+    return props.regression_folds(h=32, n=256, k=4)
+
+
+#: dense baseline whose argmin sits mid-range (same problem as the async
+#: suite) — dense spacing 5/47 ≈ 0.106 decades
+DENSE = props.log_grid(48)
+#: denser baseline for the ≤ 50 %-of-grid economics the bench commits to
+DENSE96 = props.log_grid(96)
+LAMS = props.log_grid(17)
+
+
+def _strat(**kw):
+    kw.setdefault("g", 4)
+    kw.setdefault("block", 8)
+    return engine.PiCholeskyStrategy(**kw)
+
+
+def _grid_step(lams):
+    x = np.log10(np.asarray(lams))
+    return float((x.max() - x.min()) / (x.size - 1))
+
+
+# ----------------------------------------------- search ≈ dense (property)
+
+
+@pytest.mark.tier2
+@given(backend=props.backend_names(), warm=st.booleans(),
+       q=st.sampled_from([48, 64]))
+@settings(max_examples=6, deadline=None)
+def test_search_recovers_dense_argmin(backend, warm, q):
+    """Property: the adaptive search's λ* agrees with the dense grid's
+    argmin to within ``tol_decades`` + one dense-grid step, with strictly
+    fewer evaluations — both backends, cold and warm-cache."""
+    folds = props.regression_folds(h=32, n=256, k=4)
+    lams = props.log_grid(q)
+    tol = 0.05
+    bk = props.make_backend(backend)
+    cache = factor_cache.FactorCache()
+    eng = engine.CVEngine(_strat(), backend=bk, cache=cache, lam_chunk=8)
+    dense = eng.run(folds, lams)
+    assert eng.search(folds, lams, tol_decades=tol)  # warms the cache
+    eng2 = eng if warm else engine.CVEngine(_strat(), backend=bk,
+                                            lam_chunk=8)
+    r = eng2.search(folds, lams, tol_decades=tol)
+    info = r.extras["engine"]["search"]
+    assert info["lams_evaluated"] < q
+    assert info["lams_evaluated"] == r.errors.size
+    gap = abs(np.log10(r.best_lam) - np.log10(dense.best_lam))
+    assert gap <= tol + _grid_step(lams), (r.best_lam, dense.best_lam)
+    if warm:
+        assert r.extras["engine"]["cache"]["status"] in ("hit", "refit")
+
+
+def test_search_result_contract(folds):
+    """The returned CVResult covers every evaluated λ, sorted, with the
+    search trace recorded; the coarse wave spans the grid's range."""
+    r = engine.CVEngine(_strat(), lam_chunk=8).search(folds, DENSE96)
+    info = r.extras["engine"]["search"]
+    lams = np.asarray(r.lams)
+    assert np.all(np.diff(lams) > 0)
+    assert lams.size == info["lams_evaluated"]
+    assert lams.min() == pytest.approx(float(np.asarray(DENSE96).min()))
+    assert lams.max() == pytest.approx(float(np.asarray(DENSE96).max()))
+    assert info["dense_q"] == 96
+    assert info["evals_vs_grid"] == pytest.approx(lams.size / 96)
+    assert info["stopped_on"] == "interval"
+    assert info["interval_decades"] <= info["tol_decades"]
+    assert info["waves"] * info["wave"] == lams.size
+    # the committed bench economics: ≤ half the dense grid's evaluations
+    assert info["evals_vs_grid"] <= 0.5
+    dense = engine.CVEngine(_strat()).run(folds, DENSE96)
+    gap = abs(np.log10(r.best_lam) - np.log10(dense.best_lam))
+    assert gap <= info["tol_decades"] + _grid_step(DENSE96)
+
+
+def test_search_warm_cache_zero_factorizations(folds):
+    """A run()-populated cache serves the search's state stage: zero
+    cholesky traces, n_exact_chol == 0, every wave is interp-solves."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, DENSE)
+    bk = CountingBackend(ReferenceBackend())
+    eng = engine.CVEngine(_strat(), backend=bk, cache=cache, lam_chunk=8)
+    r = eng.search(folds, DENSE)
+    assert bk.n_cholesky == 0
+    assert r.n_exact_chol == 0
+    assert r.extras["engine"]["cache"]["status"] == "hit"
+    assert bk.stage_count("fold_errors", "interp_solve") > 0
+
+
+def test_search_exact_strategy_counts_per_eval(folds):
+    """The exact strategy factorizes per evaluated λ — the search's
+    n_exact_chol accounting must reflect evaluations, not the dense q."""
+    r = engine.CVEngine("exact", lam_chunk=8).search(folds, DENSE)
+    info = r.extras["engine"]["search"]
+    k = folds.fold_hess.shape[0]
+    assert r.n_exact_chol == k * info["lams_evaluated"]
+    assert info["lams_evaluated"] < DENSE.size
+
+
+def test_search_wave_knob_and_padding(folds):
+    r = engine.CVEngine(_strat(), lam_chunk=8).search(folds, DENSE, wave=5)
+    assert r.extras["engine"]["search"]["wave"] == 5
+    # chunk-derived default: capped at 8, floored at 3
+    r2 = engine.CVEngine(_strat(), lam_chunk=4).search(folds, DENSE)
+    assert r2.extras["engine"]["search"]["wave"] == 4
+    r3 = engine.CVEngine(_strat(), lam_chunk=1).search(folds, DENSE)
+    assert r3.extras["engine"]["search"]["wave"] == 3
+
+
+def test_search_plateau_and_max_waves_termination(folds):
+    """plateau_tol=1.0 can never register an improvement after the first
+    wave, so patience waves later the plateau stop fires; max_waves caps
+    the wave count when both tolerances are out of reach."""
+    eng = engine.CVEngine(_strat(), lam_chunk=8)
+    r = eng.search(folds, DENSE, tol_decades=1e-6, plateau_tol=1.0,
+                   plateau_patience=2)
+    info = r.extras["engine"]["search"]
+    assert info["stopped_on"] == "plateau"
+    assert info["waves"] == 3            # first improves, then 2 flat
+    r2 = eng.search(folds, DENSE, tol_decades=1e-9, max_waves=2)
+    info2 = r2.extras["engine"]["search"]
+    assert info2["stopped_on"] == "max_waves" and info2["waves"] == 2
+
+
+def test_search_knob_validation(folds):
+    eng = engine.CVEngine(_strat())
+    with pytest.raises(ValueError, match="tol_decades"):
+        eng.search(folds, DENSE, tol_decades=0.0)
+    with pytest.raises(ValueError, match="plateau_tol"):
+        eng.search(folds, DENSE, plateau_tol=-0.1)
+    with pytest.raises(ValueError, match="plateau_patience"):
+        eng.search(folds, DENSE, plateau_tol=0.1, plateau_patience=0)
+    with pytest.raises(ValueError, match="max_waves"):
+        eng.search(folds, DENSE, max_waves=0)
+    with pytest.raises(ValueError, match="wave"):
+        eng.search(folds, DENSE, wave=2)
+    with pytest.raises(ValueError, match="positive"):
+        eng.search(folds, jnp.asarray([0.0, 1.0, 10.0]))
+
+
+def test_search_refuses_nonfinite_wave(folds):
+    bad = folds._replace(y_folds=folds.y_folds.at[0, 0].set(jnp.nan))
+    with pytest.raises(FloatingPointError, match="no finite"):
+        engine.CVEngine(_strat(), lam_chunk=8).search(bad, DENSE)
+
+
+# ------------------------------------------------- degenerate λ grids
+
+
+def test_empty_grid_raises_everywhere(folds):
+    """q=0 fails fast with the engine's message at EVERY entry point —
+    regression: run() used to die with an opaque reshape error and
+    run_async() with IndexError."""
+    empty = jnp.asarray([], dtype=jnp.float64)
+    eng = engine.CVEngine(_strat())
+    for call in (lambda: eng.run(folds, empty),
+                 lambda: eng.run_async(folds, empty),
+                 lambda: next(eng.sweep_async(folds, empty)),
+                 lambda: eng.run_batch([(folds, empty)]),
+                 lambda: eng.search(folds, empty)):
+        with pytest.raises(ValueError, match="empty λ grid"):
+            call()
+
+
+def test_single_lam_grid_consistent_and_search_refuses(folds):
+    """q=1 is a point evaluation: run/run_async/run_batch agree on the
+    exact strategy (no anchors to degenerate), while search refuses —
+    a single λ defines no range to refine."""
+    one = jnp.asarray([0.1])
+    r = engine.CVEngine("exact").run(folds, one)
+    ra = engine.CVEngine("exact").run_async(folds, one, stop_tol=0.0,
+                                            stop_patience=2)
+    (rb,) = engine.CVEngine("exact").run_batch([(folds, one)])
+    assert r.best_lam == ra.best_lam == rb.best_lam == 0.1
+    np.testing.assert_array_equal(r.errors, ra.errors)
+    assert not ra.extras["engine"]["async"]["stopped"]
+    with pytest.raises(ValueError, match="single λ"):
+        engine.CVEngine(_strat()).search(folds, one)
+    # picholesky on q=1: every anchor collapses to the same λ, the fit is
+    # singular and the curve all-NaN — flagged, never a silent nan pick
+    with pytest.raises(FloatingPointError):
+        engine.CVEngine(_strat()).run(folds, one)
+
+
+def test_from_errors_ranking_guards():
+    with pytest.raises(ValueError, match="empty"):
+        CVResult.from_errors(np.empty(0), np.empty(0), 0)
+    with pytest.raises(FloatingPointError, match="no finite"):
+        CVResult.from_errors(np.asarray([0.1, 1.0]),
+                             np.asarray([np.nan, np.inf]), 0)
+    r = CVResult.from_errors(np.asarray([0.1, 1.0, 2.0]),
+                             np.asarray([np.nan, 0.5, 1.0]), 0)
+    assert r.best_lam == 1.0 and r.best_error == 0.5
+
+
+# ------------------------------------------- interpolant self-selection
+
+
+def _poly_targets(lams, coeffs):
+    """(g, P) targets exactly polynomial in λ with vector coefficients."""
+    lam = np.asarray(lams)
+    return np.sum([np.outer(lam**i, c) for i, c in enumerate(coeffs)],
+                  axis=0)
+
+
+def test_loo_scores_identify_generating_degree():
+    """Targets exactly quadratic in λ: degree 1 underfits by orders of
+    magnitude, degree ≥ 2 reproduces them to rounding — and the tie
+    breaks toward the SIMPLEST candidate, so degree 2 is selected."""
+    rng = np.random.default_rng(0)
+    lam = np.logspace(-2, 1, 6)
+    t = _poly_targets(lam, [rng.normal(size=40) for _ in range(3)])
+    scores = picholesky.loo_interp_scores(t, lam, (1, 2, 3),
+                                          bases=("monomial",))
+    assert scores[(1, "monomial")] > 1e3 * scores[(2, "monomial")]
+    sel = picholesky.select_interpolant(t, lam, bases=("monomial",))
+    assert sel["degree"] == 2
+    assert sel["score"] == pytest.approx(scores[(2, "monomial")], rel=1e-6)
+    assert set(sel["scores"]) == {f"monomial/r{r}" for r in (1, 2, 3, 4)}
+
+
+def test_loo_scores_validation():
+    lam = np.logspace(-2, 1, 4)
+    t = _poly_targets(lam, [np.ones(8), np.ones(8)])
+    with pytest.raises(ValueError, match="g - 1 > degree"):
+        picholesky.loo_interp_scores(t, lam, (3,))
+    with pytest.raises(ValueError, match="basis"):
+        picholesky.loo_interp_scores(t, lam, (1,), bases=("chebyshev",))
+    with pytest.raises(ValueError, match="degrees"):
+        picholesky.select_interpolant(t, lam, ())
+
+
+def test_engine_select_interpolant_zero_chol_on_anchor_hit(folds):
+    """Selection against a warm anchor cache factorizes NOTHING; a cold
+    selection parks an anchors-only entry the subsequent sweep refits
+    from — still zero factorizations for the sweep's state stage."""
+    cache = factor_cache.FactorCache()
+    bk = CountingBackend(ReferenceBackend())
+    eng = engine.CVEngine(_strat(), backend=bk, cache=cache,
+                          cache_anchors=True)
+    sel = eng.select_interpolant(folds, LAMS)
+    assert sel["anchor_status"] == "cold+cached"
+    assert bk.n_cholesky > 0
+    assert len(sel["anchors"]) == sel["g"] == 4
+
+    bk.reset()
+    sel2 = eng.select_interpolant(folds, LAMS)
+    assert sel2["anchor_status"] == "anchors"
+    assert bk.n_cholesky == 0                      # the tentpole floor
+    assert (sel2["degree"], sel2["basis"]) == (sel["degree"], sel["basis"])
+
+    # the winning engine's sweep refits Θ from the parked anchors
+    win = eng.with_interpolant(sel["degree"], sel["basis"])
+    r = win.run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] in ("refit", "hit")
+    assert bk.n_cholesky == 0
+
+
+def test_engine_select_interpolant_cold_without_cache(folds):
+    eng = engine.CVEngine(_strat())
+    sel = eng.select_interpolant(folds, LAMS)
+    assert sel["anchor_status"] == "cold"
+    assert sel["degree"] in (1, 2) and sel["basis"] in ("monomial",
+                                                        "centered")
+    with pytest.raises(ValueError, match="picholesky"):
+        engine.CVEngine("exact").select_interpolant(folds, LAMS)
+
+
+def test_search_select_interp_records_choice(folds):
+    cache = factor_cache.FactorCache()
+    eng = engine.CVEngine(_strat(), cache=cache, cache_anchors=True,
+                          lam_chunk=8)
+    r = eng.search(folds, DENSE, select_interp=True)
+    sel = r.extras["engine"]["interp_selection"]
+    assert sel["degree"] in range(1, 3) and "scores" in sel
+    assert r.extras["engine"]["search"]["lams_evaluated"] < DENSE.size
+
+
+def test_with_interpolant_identity_and_memoization(folds):
+    eng = engine.CVEngine(_strat())
+    assert eng.with_interpolant(eng.strategy.degree,
+                                eng.strategy.basis) is eng
+    d1 = eng.with_interpolant(1, "centered")
+    assert d1 is not eng
+    assert (d1.strategy.degree, d1.strategy.basis) == (1, "centered")
+    assert d1 is eng.with_interpolant(1, "centered")
+    assert d1.strategy.g == eng.strategy.g
+    with pytest.raises(ValueError, match="picholesky"):
+        engine.CVEngine("exact").with_interpolant(1, "monomial")
+
+
+# --------------------------------------------- bound-guided anchor advice
+
+
+def test_anchor_advisor_scores_and_proposal():
+    a = props.spd_matrix(8)
+    anchors = np.logspace(-2, 2, 4)
+    out = bound.anchor_advisor(a, anchors, n_grid=3)
+    assert len(out["intervals"]) == len(out["scores"]) == 3
+    assert 0 <= out["worst"] < 3
+    lo, hi = out["intervals"][out["worst"]]
+    assert lo < out["proposal"] < hi
+    assert out["proposal"] == pytest.approx(
+        10.0 ** (0.5 * (np.log10(lo) + np.log10(hi))))
+    assert out["scores"][out["worst"]] == max(out["scores"])
+
+
+def test_anchor_advisor_validation():
+    a = props.spd_matrix(6)
+    with pytest.raises(ValueError, match="at least 2"):
+        bound.anchor_advisor(a, [1.0])
+    with pytest.raises(ValueError, match="positive"):
+        bound.anchor_advisor(a, [-1.0, 1.0])
+
+
+def test_engine_advise_anchor_probe(folds):
+    eng = engine.CVEngine(_strat())
+    out = eng.advise_anchor(folds, LAMS, probe_dim=16, n_grid=3)
+    assert out["probe_dim"] == 16
+    assert len(out["anchors"]) == 4
+    assert len(out["intervals"]) == 3
+    lo, hi = out["intervals"][out["worst"]]
+    assert lo < out["proposal"] < hi
+    # probe_dim larger than h clamps to h
+    out2 = eng.advise_anchor(folds, LAMS, probe_dim=4096, n_grid=3)
+    assert out2["probe_dim"] == folds.fold_hess.shape[-1]
+    with pytest.raises(ValueError, match="anchored"):
+        engine.CVEngine("exact").advise_anchor(folds, LAMS)
+
+
+# ------------------------------------------------ anchors-only cache entries
+
+
+def test_anchors_only_entry_semantics(folds, tmp_path):
+    """An anchors-only entry (selection's parking spot) serves
+    get_anchors but never lookup — and survives a save/load round-trip
+    without a state record."""
+    cache = factor_cache.FactorCache()
+    eng = engine.CVEngine(_strat(), cache=cache, cache_anchors=True)
+    eng.select_interpolant(folds, LAMS)
+    assert len(cache) == 1
+    (entry,) = cache.entries.values()
+    assert entry.state is None and entry.anchors is not None
+    key = entry.key
+    assert cache.lookup(key, policy="exact") is None
+    assert cache.lookup(key, policy="covering") is None
+    assert cache.get_anchors(key) is not None
+
+    cache.save(str(tmp_path))
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert len(loaded) == 1
+    (back,) = loaded.entries.values()
+    assert back.state is None
+    np.testing.assert_array_equal(np.asarray(back.anchors.vec),
+                                  np.asarray(entry.anchors.vec))
+
+    with pytest.raises(ValueError, match="anchors"):
+        cache.put(key, None, None)

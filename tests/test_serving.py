@@ -280,3 +280,89 @@ def test_run_batch_without_cache_falls_back():
     (r,) = eng.run_batch([(f, LAMS)])
     np.testing.assert_array_equal(
         r.errors, engine.CVEngine(_strat()).run(f, LAMS).errors)
+
+
+# -------------------------------------- admission validation (satellite)
+
+
+def test_rejected_precision_leaves_pool_untouched():
+    """Regression: ``_admission_key`` used to instantiate a pooled engine
+    just to read the policy name, so a request with a BOGUS precision
+    preset left a zombie engine in the pool even though submit raised.
+    Rejection must now be side-effect free."""
+    srv = _server()
+    with pytest.raises(ValueError, match="precision"):
+        srv.submit(SweepRequest("a", _folds(seed=1), LAMS,
+                                precision="float128_maybe"))
+    assert srv._engines == {}
+    assert srv.pending == 0
+    assert srv._next_id == 0          # the rejected request got no id
+
+
+def test_rejected_mode_leaves_queue_untouched():
+    srv = _server()
+    with pytest.raises(ValueError, match="mode"):
+        srv.submit(SweepRequest("a", _folds(seed=1), LAMS, mode="binary"))
+    assert srv.pending == 0 and srv._engines == {}
+
+
+def test_admission_key_includes_lam_dtype_and_mode():
+    """The λ-grid dtype shapes the chunk-stage jit signature, so float32
+    and float64 grids must not fuse; grid and search requests never fuse
+    either.  Computing the key itself must not touch the engine pool."""
+    srv = _server()
+    f = _folds(seed=1)
+    l64 = jnp.asarray(np.asarray(LAMS), jnp.float64)
+    l32 = jnp.asarray(np.asarray(LAMS), jnp.float32)
+    k64 = srv._admission_key(SweepRequest("a", f, l64))
+    k32 = srv._admission_key(SweepRequest("a", f, l32))
+    ks = srv._admission_key(SweepRequest("a", f, l64, mode="search"))
+    assert "float64" in k64 and "float32" in k32
+    assert k64 != k32
+    assert ks != k64 and ks[0] == "search" and k64[0] == "grid"
+    assert srv._engines == {}
+
+
+# ----------------------------------------------- mode='search' requests
+
+
+def test_search_mode_served_with_fewer_evals():
+    """A search-mode request is served through the adaptive refinement —
+    far fewer λ evaluations than the grid — and its anchor factorizations
+    populate the SHARED cache, so a grid request that follows is warm."""
+    f = _folds(seed=7)
+    dense = props.log_grid(96)
+    srv = _server(max_batch=8, search_tol=0.05, search_wave=6)
+    srv.submit(SweepRequest("a", f, dense, mode="search"))
+    srv.submit(SweepRequest("b", f, dense, mode="search"))
+    assert len(srv._queues) == 1          # same geometry → one group
+    (ra, rb) = srv.step()
+    info = ra.result.extras["engine"]["search"]
+    assert info["wave"] == 6              # ServerConfig knob forwarded
+    assert info["tol_decades"] == 0.05
+    assert info["lams_evaluated"] < dense.size
+    assert ra.status == "miss"            # cold populate ...
+    assert rb.status in ("hit", "refit")  # ... second rider is warm
+    assert rb.result.n_exact_chol == 0
+
+    # cross-mode sharing: the dense grid rides the same cache entry
+    srv.submit(SweepRequest("a", f, dense, mode="grid"))
+    (rg,) = srv.step()
+    assert rg.status in ("hit", "refit")
+    assert rg.result.errors.size == dense.size
+    gap = abs(np.log10(ra.result.best_lam) - np.log10(rg.result.best_lam))
+    assert gap <= info["tol_decades"] + 5.0 / 95.0
+    assert srv.stats["served"] == 3
+
+
+def test_search_and_grid_modes_never_fuse():
+    f = _folds(seed=1)
+    srv = _server()
+    srv.submit(SweepRequest("a", f, LAMS, mode="grid"))
+    srv.submit(SweepRequest("b", f, LAMS, mode="search"))
+    assert len(srv._queues) == 2
+    resps = srv.drain()
+    modes = {r.tenant: "search" in r.result.extras["engine"]
+             for r in resps}
+    assert modes == {"a": False, "b": True}
+    assert {r.batch_size for r in resps} == {1}
