@@ -5,7 +5,7 @@ unified CVEngine (one jitted batched computation, optionally sharded over
 all local devices with --mesh).
 
     PYTHONPATH=src python examples/ridge_cv.py [--h 512] [--n 1500] [--mesh]
-                                               [--tune] [--search]
+                                               [--tune] [--search] [--sketch]
 """
 import argparse
 import time
@@ -42,6 +42,11 @@ def main():
                          "grid's λ* with a fraction of its evaluations, "
                          "plus LOO interpolant selection and bound-guided "
                          "anchor advice")
+    ap.add_argument("--sketch", action="store_true",
+                    help="sketched-anchor + low-rank demo: build anchor "
+                         "factors from a CountSketch-compressed Gram "
+                         "(n ≫ h regime) and run the low-rank ACV "
+                         "strategy on an n ≪ h problem")
     args = ap.parse_args()
 
     x, y = make_regression_dataset(jax.random.PRNGKey(0), args.n, args.h,
@@ -187,6 +192,57 @@ def main():
         print(f"  anchor advice (probe d={adv['probe_dim']}): weakest "
               f"interval [{lo:.3g}, {hi:.3g}] → next anchor "
               f"≈ {adv['proposal']:.4g}")
+
+    # ---- sketched anchors + low-rank ACV: the two regimes outside the
+    # dense pipeline's sweet spot.  n ≫ h: anchor factors come from a
+    # CountSketch-compressed Gram (m buckets instead of n_tr rows) + IHS
+    # refinement — curves converge to the dense engine's as m grows.
+    # n ≪ h: one SVD of the (n_tr, h) design replaces g Choleskys of the
+    # (h, h) Hessian; the spectral sweep matches the exact engine.
+    if args.sketch:
+        from repro.core import sketch as sk  # noqa: E402
+        from repro.data import make_low_rank_dataset  # noqa: E402
+
+        n_tall = max(args.n, 16 * args.h)
+        xt, yt = make_regression_dataset(jax.random.PRNGKey(2), n_tall,
+                                         args.h, dtype=jnp.float64,
+                                         noise=8.0)
+        tfolds = cv.make_folds(xt, yt, args.folds)
+        r_dense = engine.CVEngine(engine.PiCholeskyStrategy(g=4)).run(
+            tfolds, lams)
+        ed = np.asarray(r_dense.errors)
+        print(f"\nSketched anchors (countsketch, n={n_tall} ≫ h={args.h}, "
+              f"dense λ*={r_dense.best_lam:.4g}):")
+        print(f"{'m':>6s} {'time(s)':>8s} {'max curve diff':>15s} "
+              f"{'regret on dense':>16s} {'selected λ':>11s}")
+        for m in (1024, 4096):
+            plan = sk.SketchPlan(method="countsketch", m=m, seed=0,
+                                 ihs_iters=2)
+            eng = engine.CVEngine(engine.PiCholeskyStrategy(g=4),
+                                  sketch=plan)
+            eng.run(tfolds, lams)                 # compile
+            t0 = time.perf_counter()
+            r = eng.run(tfolds, lams)
+            dt = time.perf_counter() - t0
+            es = np.asarray(r.errors)
+            regret = ed[int(np.argmin(es))] - ed.min()
+            print(f"{m:6d} {dt:8.2f} {np.max(np.abs(es - ed)):15.3e} "
+                  f"{regret:16.3e} {r.best_lam:11.4g}")
+
+        h_wide, n_small, rank = 4 * args.h, args.h // 4, args.h // 16
+        xl, yl = make_low_rank_dataset(jax.random.PRNGKey(3), n_small,
+                                       h_wide, rank, dtype=jnp.float64)
+        lfolds = cv.make_folds(xl, yl, args.folds)
+        print(f"\nLow-rank ACV (h={h_wide} ≫ n={n_small}, planted "
+              f"rank {rank}):")
+        for name in ("exact", "low_rank"):
+            eng = engine.CVEngine(name)
+            eng.run(lfolds, lams)                 # compile
+            t0 = time.perf_counter()
+            r = eng.run(lfolds, lams)
+            dt = time.perf_counter() - t0
+            print(f"{name:9s} {dt:8.2f} {r.best_error:12.4f} "
+                  f"{r.best_lam:11.4g} {r.n_exact_chol:6d} chol")
 
     # ---- mixed-precision policies: one PrecisionPolicy governs storage /
     # compute / accumulation / fit dtypes and the per-chunk fp32 residual

@@ -74,14 +74,16 @@ from repro.distributed import sharding as shardlib
 
 from . import factor_cache as cachelib
 from . import packing, picholesky, solvers
+from . import sketch as sketchlib
 from .backends import BackendLike, LinalgBackend, resolve_backend
 from .folds import CVResult, FoldData, holdout_nrmse
 from .precision import PrecisionLike
 
 __all__ = [
     "CVStrategy", "CVEngine", "SweepChunk", "make_strategy", "STRATEGIES",
-    "ExactCholesky", "PiCholeskyStrategy", "PiCholeskyWarmstart",
-    "SVDStrategy", "PinrmseStrategy",
+    "ExactCholesky", "PiCholeskyStrategy", "PiCholeskySketched",
+    "PiCholeskyWarmstart", "SVDStrategy", "PinrmseStrategy",
+    "LowRankStrategy",
 ]
 
 
@@ -250,6 +252,118 @@ class PiCholeskyStrategy(_InterpolantErrors, StrategyBase):
         # fit from the full-precision targets, cache at the storage dtype
         return model, vec.astype(bk.precision.store_dtype(vec.dtype))
 
+    def anchor_hessian(self, f_idx, h_tr_f, x_folds, bk):
+        """Hessian the anchor factorizations run on — the exact per-fold
+        training Hessian here; the sketched subclass substitutes its
+        sketched gram so interpolant selection scores the same targets
+        the sweep will actually fit."""
+        return h_tr_f
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PiCholeskySketched(PiCholeskyStrategy):
+    """Algorithm 1 over **sketched** anchor Hessians — Iterative Hessian
+    Sketch (Pilanci & Wainwright, arXiv:1411.0347) behind the piCholesky
+    seam.
+
+    Each fold's anchor factorizations run on ``H̃_f = (S X_tr)ᵀ (S X_tr)``
+    built from ``m ≪ n`` sketched rows of the fold's training design
+    (reconstructed from the *other* folds' raw blocks, like
+    :class:`SVDStrategy`), so forming the anchor Hessian costs O(m·h²)
+    instead of O(n·h²) — the win at n ≫ h geometries.  The interpolated
+    solves are then IHS-corrected in ``fold_errors``: the sketched factor
+    is the *preconditioner* and the residuals are exact (dense ``H_f``),
+    so the solve error contracts geometrically with
+    ``sketch.ihs_iters`` — reusing the precision policy's
+    :func:`~repro.core.picholesky.refine_solutions` loop with an explicit
+    iteration override.
+
+    Everything downstream of :func:`~repro.core.picholesky.fit` — packed
+    trsm, fused ``interp_solve``, λ-chunking, warm-replay cache, async
+    sweep, ``search()`` — consumes the sketched state unchanged.  The
+    plan's :meth:`~repro.core.sketch.SketchPlan.descriptor` rides in
+    ``cache_meta`` → :class:`~repro.core.factor_cache.CacheKey`, so a
+    sketched factor can never silently serve an exact request (nor one
+    sketched under a different method/m/seed/iteration count).
+
+    ``fold_state`` reads raw fold rows from ``aux`` and the fold index, so
+    it is neither Hessian-donatable nor admission-batchable; ``run_batch``
+    degrades to per-problem runs.
+    """
+
+    sketch: Optional[sketchlib.SketchPlan] = None
+    name: str = "picholesky_sketched"
+    state_uses_hessian = False
+    batchable_state = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "sketch", sketchlib.as_plan(self.sketch))
+
+    def _plan(self) -> sketchlib.SketchPlan:
+        if self.sketch is None:
+            raise ValueError(
+                "picholesky_sketched needs a SketchPlan: pass "
+                "CVEngine(sketch=...) or PiCholeskySketched(sketch=...)")
+        return self.sketch
+
+    @staticmethod
+    def _train_rows(f_idx, x_folds):
+        k, n_f, h = x_folds.shape
+        others = (f_idx + 1 + jnp.arange(k - 1)) % k
+        return x_folds[others].reshape((k - 1) * n_f, h)
+
+    def _sketched_hessian(self, f_idx, x_folds, bk):
+        x_tr = self._train_rows(f_idx, x_folds)
+        ad = bk.precision.accum_dtype(x_tr.dtype)
+        h_sk = sketchlib.sketched_gram(self._plan(), x_tr, f_idx,
+                                       accum_dtype=ad)
+        return h_sk.astype(x_tr.dtype)
+
+    def anchor_hessian(self, f_idx, h_tr_f, x_folds, bk):
+        return self._sketched_hessian(f_idx, x_folds, bk)
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        self._plan()    # fail at trace time, not mid-vmap
+        return dict(anchors=_sample_grid(lams, self.g), x=x_folds)
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        h_sk = self._sketched_hessian(f_idx, aux["x"], bk)
+        return picholesky.fit(h_sk, aux["anchors"], self.degree,
+                              block=self.block, basis=self.basis,
+                              chol_fn=self.chol_fn, backend=bk)
+
+    def fold_state_and_anchors(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        h_sk = self._sketched_hessian(f_idx, aux["x"], bk)
+        h = h_sk.shape[-1]
+        eye = jnp.eye(h, dtype=h_sk.dtype)
+        factors = jax.vmap(
+            lambda lam: bk.cholesky(h_sk + lam * eye))(aux["anchors"])
+        vec = bk.pack_tril(factors, self.block)
+        pf = packing.PackedFactor(vec=vec, h=h, block=self.block)
+        model = picholesky.fit(h_sk, aux["anchors"], self.degree,
+                               block=self.block, basis=self.basis,
+                               factors=pf, backend=bk)
+        return model, vec.astype(bk.precision.store_dtype(vec.dtype))
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        # The IHS loop IS refine_solutions with the exact Hessian: the
+        # sketched interpolant preconditions, the residual is dense-exact.
+        # Never reads aux — warm replay runs with aux=().
+        thetas = state.solve(lams, g_tr_f, backend=bk)
+        iters = self._plan().ihs_iters + bk.precision.refine_iters
+        if iters:
+            thetas = picholesky.refine_solutions(state, h_tr_f, g_tr_f,
+                                                 lams, thetas, backend=bk,
+                                                 iters=iters)
+        return _errors_from_thetas(thetas, x_f, y_f)
+
+    def cache_meta(self, lams):
+        meta = super().cache_meta(lams)
+        if meta is None:
+            return None
+        meta["sketch"] = self._plan().descriptor()
+        return meta
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class PiCholeskyWarmstart(_InterpolantErrors, StrategyBase):
@@ -369,6 +483,70 @@ class SVDStrategy(StrategyBase):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class LowRankStrategy(StrategyBase):
+    """Low-rank ACV (Stephenson, Udell & Broderick, arXiv:2008.10547) for
+    the n ≪ h / rank-r regime the dense pipeline can't touch.
+
+    ``fold_state`` SVDs the fold's raw (n_tr, h) training design — O(n²h),
+    vs g·O(h³) anchor Cholesky factorizations — into
+    :class:`~repro.core.solvers.LowRankFactors`; ``fold_errors`` sweeps any
+    λ grid through the Woodbury identity
+
+        θ(λ) = V (1/(e+λ) − 1/λ) Vᵀg + g/λ,
+
+    exactly equal to the exact ridge path whenever ``rank ≥ rank(X)``
+    (zero-eigenvalue directions self-cancel) and the rank-r ACV
+    approximation below it.  The state is **λ-independent** — its cache
+    entry carries an empty anchor grid, so *any* grid over the same
+    problem replays it — and y-independent, so the Hessian-fingerprint
+    content addressing is exactly valid (V, e are the eigenpairs of
+    ``H_tr``).  ``cache_meta``'s sketch descriptor (``lowrank/r…``) keeps
+    rank-truncated factors from ever serving an exact or differently
+    truncated request.
+    """
+
+    rank: Optional[int] = None      # None = full min(n_tr, h)
+    name: str = "low_rank"
+    state_uses_hessian = False
+    batchable_state = False
+
+    def n_exact_chol(self, k, q):
+        return 0
+
+    def descriptor(self) -> str:
+        return f"lowrank/r{'full' if self.rank is None else int(self.rank)}"
+
+    def prepare(self, x_folds, y_folds, h_tr, g_tr, lams, bk):
+        return dict(x=x_folds)
+
+    def fold_state(self, f_idx, h_tr_f, g_tr_f, aux, bk):
+        k, n_f, h = aux["x"].shape
+        others = (f_idx + 1 + jnp.arange(k - 1)) % k
+        x_tr = aux["x"][others].reshape((k - 1) * n_f, h)
+        return solvers.lowrank_ridge_factors(x_tr, self.rank,
+                                             precision=bk.precision)
+
+    def fold_errors(self, state, f_idx, h_tr_f, g_tr_f, x_f, y_f, lams, aux, bk):
+        # never reads aux — warm replay runs with aux=()
+        thetas = solvers.lowrank_ridge_sweep(
+            state, g_tr_f, lams,
+            compute_dtype=bk.precision.accum_dtype(g_tr_f.dtype))
+        return _errors_from_thetas(thetas, x_f, y_f)
+
+    def cache_meta(self, lams):
+        lams = jnp.asarray(lams)
+        # λ-independent state: empty anchor grid, so every grid over the
+        # same problem derives the same key — any-grid warm replay.
+        # block=0 rides in params because the engine's make_key call sites
+        # read the packing block from there; the low-rank state is unpacked.
+        return dict(anchors=jnp.zeros((0,), lams.dtype),
+                    params=dict(strategy=self.name, block=0,
+                                rank=-1 if self.rank is None
+                                else int(self.rank)),
+                    sketch=self.descriptor())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class PinrmseStrategy(StrategyBase):
     """PINRMSE straw-man (§6.5): interpolate the hold-out-error *curve*
     itself from g exact evaluations — the paper shows it selects wrong λ's.
@@ -412,8 +590,10 @@ class PinrmseStrategy(StrategyBase):
 STRATEGIES = {
     "exact": ExactCholesky,
     "picholesky": PiCholeskyStrategy,
+    "picholesky_sketched": PiCholeskySketched,
     "picholesky_warmstart": PiCholeskyWarmstart,
     "svd": SVDStrategy,
+    "low_rank": LowRankStrategy,
     "pinrmse": PinrmseStrategy,
 }
 
@@ -539,6 +719,13 @@ class CVEngine:
                :func:`~repro.distributed.autotune.tune` (``blocks=``,
                ``chunks=``, ``mesh_shapes=``, ``hw=``) — benches and
                tests shrink the search with this.
+    sketch:    a :class:`~repro.core.sketch.SketchPlan` (or its dict form)
+               switching anchor factorization to the sketched route:
+               ``CVEngine(strategy='picholesky', sketch=plan)`` upgrades
+               the strategy to :class:`PiCholeskySketched` — anchor
+               Hessians built from ``m ≪ n`` sketched rows, IHS-refined
+               solves, cache entries keyed by the plan's descriptor.
+               ``None`` (default) keeps exact anchors.
     """
 
     strategy: Union[CVStrategy, str]
@@ -554,10 +741,37 @@ class CVEngine:
     tune: Any = False
     tune_cache: Optional[Any] = None
     tune_lattice: Optional[dict] = None
+    sketch: Optional[Any] = None
 
     def __post_init__(self):
         if isinstance(self.strategy, str):
             self.strategy = make_strategy(self.strategy)
+        if self.sketch is not None:
+            plan = sketchlib.as_plan(self.sketch)
+            strat = self.strategy
+            if isinstance(strat, PiCholeskySketched):
+                if strat.sketch is None:
+                    self.strategy = dataclasses.replace(strat, sketch=plan)
+                elif strat.sketch != plan:
+                    raise ValueError(
+                        f"conflicting sketch plans: engine sketch= is "
+                        f"{plan.descriptor()} but the strategy carries "
+                        f"{strat.sketch.descriptor()}")
+            elif isinstance(strat, PiCholeskyStrategy) and \
+                    type(strat) is PiCholeskyStrategy:
+                self.strategy = PiCholeskySketched(
+                    g=strat.g, degree=strat.degree, block=strat.block,
+                    basis=strat.basis, chol_fn=strat.chol_fn, sketch=plan)
+            else:
+                raise ValueError(
+                    "sketch= needs the picholesky strategy, got "
+                    f"{getattr(strat, 'name', strat)!r}")
+            self.sketch = plan
+        if isinstance(self.strategy, PiCholeskySketched) \
+                and self.strategy.sketch is None:
+            raise ValueError(
+                "picholesky_sketched needs a SketchPlan: pass "
+                "CVEngine(sketch=...) or a strategy instance with sketch=")
         if self.reuse is True:
             self.reuse = "exact"
         if self.reuse not in (False, "exact", "covering"):
@@ -1069,7 +1283,8 @@ class CVEngine:
             key = cachelib.make_key(
                 h_tr, meta["anchors"], block=meta["params"]["block"],
                 backend=bk.name, params=meta["params"],
-                precision=self._prec.descriptor())
+                precision=self._prec.descriptor(),
+                sketch=meta.get("sketch", "exact"))
 
             def cold_state(with_anchors):
                 state, pf, _ = self._pipelined_state(
@@ -1515,17 +1730,21 @@ class CVEngine:
 
     def _anchor_targets_fn(self):
         """Jitted (k, g, P) anchor-factorize stage for interpolant
-        selection: per fold, Cholesky at each anchor shift, tile-packed."""
+        selection: per fold, Cholesky at each anchor shift, tile-packed.
+        The anchor Hessian goes through the strategy's ``anchor_hessian``
+        hook, so sketched strategies select against the sketched targets
+        the sweep will actually fit."""
         if self._anchor_targets is None:
             strat, bk = self.strategy, self._bk
 
-            def targets(h_tr, anchors):
-                def per_fold(h_f):
-                    eye = jnp.eye(h_f.shape[-1], dtype=h_f.dtype)
+            def targets(h_tr, anchors, x_folds):
+                def per_fold(f, h_f):
+                    h_eff = strat.anchor_hessian(f, h_f, x_folds, bk)
+                    eye = jnp.eye(h_eff.shape[-1], dtype=h_eff.dtype)
                     factors = jax.vmap(
-                        lambda lam: bk.cholesky(h_f + lam * eye))(anchors)
+                        lambda lam: bk.cholesky(h_eff + lam * eye))(anchors)
                     return bk.pack_tril(factors, strat.block)
-                return jax.vmap(per_fold)(h_tr)
+                return jax.vmap(per_fold)(jnp.arange(h_tr.shape[0]), h_tr)
 
             self._anchor_targets = jax.jit(targets)
         return self._anchor_targets
@@ -1563,13 +1782,15 @@ class CVEngine:
         if self.cache is not None and meta is not None:
             key = cachelib.make_key(
                 h_tr, meta["anchors"], block=strat.block, backend=bk.name,
-                params=meta["params"], precision=self._prec.descriptor())
+                params=meta["params"], precision=self._prec.descriptor(),
+                sketch=meta.get("sketch", "exact"))
         pf = (self.cache.get_anchors(key)
               if key is not None and self.reuse else None)
         status = "anchors"
         if pf is None:
             with self._stage_scope("fold_state"):
-                vec = self._anchor_targets_fn()(h_tr, anchors)
+                vec = self._anchor_targets_fn()(h_tr, anchors,
+                                                folds.x_folds)
             vec = vec.astype(self._prec.store_dtype(vec.dtype))
             pf = packing.PackedFactor(vec=vec, h=int(h_tr.shape[-1]),
                                       block=strat.block)
@@ -1689,7 +1910,8 @@ class CVEngine:
         key = cachelib.make_key(
             h_tr, meta["anchors"], block=meta["params"]["block"],
             backend=self._bk.name, params=meta["params"],
-            precision=self._prec.descriptor())
+            precision=self._prec.descriptor(),
+            sketch=meta.get("sketch", "exact"))
         k = h_tr.shape[0]
 
         def cold_state(with_anchors):
@@ -1836,7 +2058,8 @@ class CVEngine:
         keys = [cachelib.make_key(
             h_tr, m["anchors"], block=m["params"]["block"],
             backend=self._bk.name, params=m["params"],
-            precision=self._prec.descriptor())
+            precision=self._prec.descriptor(),
+            sketch=m.get("sketch", "exact"))
             for (h_tr, _), m in zip(splits, metas)]
         with_anchors = (self.cache_anchors
                         and hasattr(strat, "fold_state_and_anchors"))

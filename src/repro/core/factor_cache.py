@@ -22,7 +22,12 @@ Keying — a :class:`CacheKey` is a content fingerprint, never an object id:
 * ``params``        the strategy's static fit parameters (degree, basis, …),
 * ``precision``     the :class:`~repro.core.precision.PrecisionPolicy`
                     descriptor the state was fitted/stored under — a bf16
-                    entry can never silently serve an fp32 request.
+                    entry can never silently serve an fp32 request,
+* ``sketch``        how the anchor factors were *produced*
+                    (:meth:`~repro.core.sketch.SketchPlan.descriptor`, a
+                    low-rank descriptor, or ``'exact'``) — a sketched or
+                    rank-truncated factor can never silently serve an
+                    exact request, on any of the three lookup routes.
 
 Three derived digests serve three lookups:
 
@@ -65,7 +70,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 
-from . import packing, picholesky
+from . import packing, picholesky, solvers
 
 __all__ = ["CacheKey", "CacheEntry", "FactorCache", "array_hash",
            "hessian_fingerprint", "make_key", "INDEX_FILENAME"]
@@ -114,13 +119,20 @@ class CacheKey:
     backend: str
     params: Tuple[Tuple[str, Any], ...]
     precision: str = "native"
+    #: anchor-production descriptor — ``'exact'`` for dense Cholesky,
+    #: ``SketchPlan.descriptor()`` for sketched anchors, ``'lowrank/r…'``
+    #: for the low-rank path.  A first-class field (not a ``params``
+    #: entry) so :meth:`anchor_digest` — which deletes ``params`` for
+    #: degree/basis-independent anchor reuse — still separates sketched
+    #: from exact factors.
+    sketch: str = "exact"
 
     def _payload(self) -> dict:
         return dict(fold_hashes=list(self.fold_hashes),
                     anchors=list(self.anchors), h=self.h, block=self.block,
                     dtype=self.dtype, backend=self.backend,
                     params=[list(p) for p in self.params],
-                    precision=self.precision)
+                    precision=self.precision, sketch=self.sketch)
 
     def digest(self) -> str:
         return _digest(self._payload())
@@ -148,11 +160,13 @@ class CacheKey:
                    h=int(rec["h"]), block=int(rec["block"]),
                    dtype=str(rec["dtype"]), backend=str(rec["backend"]),
                    params=tuple((str(k), v) for k, v in rec["params"]),
-                   precision=str(rec.get("precision", "native")))
+                   precision=str(rec.get("precision", "native")),
+                   sketch=str(rec.get("sketch", "exact")))
 
 
 def make_key(h_tr, anchors, *, block: int, backend: str,
-             params: Dict[str, Any], precision: str = "native") -> CacheKey:
+             params: Dict[str, Any], precision: str = "native",
+             sketch: str = "exact") -> CacheKey:
     """Fingerprint a sweep's λ-independent inputs.
 
     ``h_tr``: (k, h, h) per-fold training Hessians (hashed on host — one
@@ -161,6 +175,8 @@ def make_key(h_tr, anchors, *, block: int, backend: str,
     ``params``: the strategy's static fit parameters (degree, basis, g, …).
     ``precision``: the policy descriptor the state is fitted/stored under
     (:meth:`~repro.core.precision.PrecisionPolicy.descriptor`).
+    ``sketch``: the anchor-production descriptor (``'exact'`` | a
+    :meth:`~repro.core.sketch.SketchPlan.descriptor` | ``'lowrank/r…'``).
     """
     h_tr = np.asarray(h_tr)
     return CacheKey(
@@ -169,7 +185,7 @@ def make_key(h_tr, anchors, *, block: int, backend: str,
         h=int(h_tr.shape[-1]), block=int(block),
         dtype=str(h_tr.dtype), backend=str(backend),
         params=tuple(sorted(params.items())),
-        precision=str(precision))
+        precision=str(precision), sketch=str(sketch))
 
 
 def _tree_nbytes(tree) -> int:
@@ -215,7 +231,11 @@ class CacheEntry:
     but can never satisfy a state ``lookup``."""
 
     key: CacheKey
-    state: Optional[picholesky.PiCholesky]  # theta (k, r+1, P), center (k,)
+    #: fitted per-fold state: a :class:`~repro.core.picholesky.PiCholesky`
+    #: (theta (k, r+1, P), center (k,)) or, for the low-rank strategy, a
+    #: :class:`~repro.core.solvers.LowRankFactors` (vt (k, r, h), evals
+    #: (k, r)).  ``None`` marks an anchors-only entry.
+    state: Optional[Any]
     anchors: Optional[packing.PackedFactor] = None   # vec (k, g, P)
     hits: int = 0
     nbytes: int = 0                       # array payload (state + anchors),
@@ -350,7 +370,7 @@ class FactorCache:
         entry = self.entries.get(key.digest())
         if entry is not None and entry.state is None:
             entry = None        # anchors-only entry: no Θ to serve
-        if entry is None and policy == "covering":
+        if entry is None and policy == "covering" and key.anchors:
             lo, hi = min(key.anchors), max(key.anchors)
             best_width = None
             for digest in self._by_base.get(key.base_digest(), ()):
@@ -466,18 +486,26 @@ class FactorCache:
         for offset, (digest, e) in enumerate(sorted(self.entries.items())):
             step = base + offset
             tree = {}
-            if e.state is not None:
+            if isinstance(e.state, solvers.LowRankFactors):
+                tree["vt"] = e.state.vt
+                tree["evals"] = e.state.evals
+                srec_out = {"kind": "low_rank",
+                            "vt": self._leaf_spec(e.state.vt),
+                            "evals": self._leaf_spec(e.state.evals)}
+            elif e.state is not None:
                 tree["theta"] = e.state.theta
                 tree["center"] = e.state.center
+                srec_out = {"h": e.state.h, "block": e.state.block,
+                            "theta": self._leaf_spec(e.state.theta),
+                            "center": self._leaf_spec(e.state.center)}
+            else:
+                srec_out = None
             if e.anchors is not None:
                 tree["anchors_vec"] = e.anchors.vec
             mgr.save(step, tree)
             rec = {
                 "step": step, "digest": digest, "key": e.key.to_json(),
-                "state": None if e.state is None else {
-                    "h": e.state.h, "block": e.state.block,
-                    "theta": self._leaf_spec(e.state.theta),
-                    "center": self._leaf_spec(e.state.center)},
+                "state": srec_out,
                 "anchors": None if e.anchors is None else {
                     "h": e.anchors.h, "block": e.anchors.block,
                     "vec": self._leaf_spec(e.anchors.vec)},
@@ -519,8 +547,12 @@ class FactorCache:
             if key.digest() != rec["digest"]:
                 continue
             srec = rec["state"]
+            kind = (srec or {}).get("kind", "picholesky")
             like = {}
-            if srec is not None:
+            if srec is not None and kind == "low_rank":
+                like["vt"] = cls._leaf_like(srec["vt"])
+                like["evals"] = cls._leaf_like(srec["evals"])
+            elif srec is not None:
                 like["theta"] = cls._leaf_like(srec["theta"])
                 like["center"] = cls._leaf_like(srec["center"])
             arec = rec.get("anchors")
@@ -534,9 +566,15 @@ class FactorCache:
                    or np.asarray(tree[name]).dtype != np.asarray(ref).dtype
                    for name, ref in like.items()):
                 continue     # index/payload mismatch — drop, never mis-serve
-            state = None if srec is None else picholesky.PiCholesky(
-                theta=tree["theta"], center=tree["center"],
-                h=int(srec["h"]), block=int(srec["block"]))
+            if srec is None:
+                state = None
+            elif kind == "low_rank":
+                state = solvers.LowRankFactors(
+                    vt=tree["vt"], evals=tree["evals"])
+            else:
+                state = picholesky.PiCholesky(
+                    theta=tree["theta"], center=tree["center"],
+                    h=int(srec["h"]), block=int(srec["block"]))
             anchors = None
             if arec is not None:
                 anchors = packing.PackedFactor(

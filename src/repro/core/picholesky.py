@@ -297,7 +297,8 @@ def evaluate(model: PiCholesky, lams: jax.Array) -> jax.Array:
 
 def refine_solutions(model: PiCholesky, hessian: jax.Array, g: jax.Array,
                      lams: jax.Array, thetas: jax.Array,
-                     backend: BackendLike = "reference") -> jax.Array:
+                     backend: BackendLike = "reference",
+                     iters: Optional[int] = None) -> jax.Array:
     """Iterative refinement of ``interp_solve`` solutions — the accuracy
     half of the ``bf16_refined`` policy.
 
@@ -313,10 +314,13 @@ def refine_solutions(model: PiCholesky, hessian: jax.Array, g: jax.Array,
     (q_chunk, h) residuals ride inside the existing O(chunk · P) budget.
 
     No-op (returns ``thetas`` unchanged) when the backend policy's
-    ``refine_iters`` is 0.
+    ``refine_iters`` is 0.  ``iters=`` overrides the policy count — the
+    sketched-anchor path uses this to run its IHS contraction loop
+    (exact residuals against the dense Hessian, sketched factor as the
+    preconditioner) through the same fused solve.
     """
     bk = resolve_backend(backend)
-    iters = bk.precision.refine_iters
+    iters = bk.precision.refine_iters if iters is None else int(iters)
     if iters <= 0:
         return thetas
     ad = bk.precision.accum_dtype(model.theta.dtype)

@@ -1,0 +1,183 @@
+"""Row-sketch plans for sketched anchor factorization.
+
+A :class:`SketchPlan` describes how to compress an ``(n, h)`` design block
+``X`` into ``m << n`` sketched rows ``S @ X`` whose Gram matrix
+``(SX)^T (SX)`` approximates the fold Hessian ``X^T X``.  Anchor Cholesky
+factors built from the sketched Gram feed the piCholesky interpolation
+pipeline unchanged; the Iterative Hessian Sketch refinement loop
+(Pilanci & Wainwright, arXiv:1411.0347) then contracts the solve error
+geometrically using *exact* residuals against the dense Hessian.
+
+Everything is seeded through ``jax.random`` keys derived from
+``(plan.seed, fold_index)`` so sketches are reproducible, vmap-safe over
+folds, and cache-addressable: ``plan.descriptor()`` is the string that
+lands in :class:`repro.core.factor_cache.CacheKey`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SKETCH_METHODS",
+    "SketchPlan",
+    "as_plan",
+    "fwht",
+    "next_pow2",
+    "sketch_rows",
+    "sketched_gram",
+]
+
+SKETCH_METHODS = ("gaussian", "srht", "countsketch")
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchPlan:
+    """Describes one reproducible row-sketch of a design block.
+
+    Attributes
+    ----------
+    method:
+        One of ``"gaussian"`` (dense sub-Gaussian projection), ``"srht"``
+        (subsampled randomized Hadamard transform) or ``"countsketch"``
+        (sparse count-sketch via bucketed signed sums).
+    m:
+        Number of sketched rows.  Accuracy tightens as ``m`` grows; the
+        embedding is only useful when ``m >= h``.
+    seed:
+        Base seed; the per-fold key is ``fold_in(PRNGKey(seed), f_idx)``.
+    ihs_iters:
+        Extra iterative-Hessian-sketch refinement iterations run against
+        the exact Hessian after the interpolated solve.
+    """
+
+    method: str = "countsketch"
+    m: int = 256
+    seed: int = 0
+    ihs_iters: int = 2
+
+    def __post_init__(self):
+        if self.method not in SKETCH_METHODS:
+            raise ValueError(
+                f"unknown sketch method {self.method!r}; expected one of {SKETCH_METHODS}"
+            )
+        if int(self.m) <= 0:
+            raise ValueError(f"sketch size m must be positive, got {self.m}")
+        if int(self.ihs_iters) < 0:
+            raise ValueError(f"ihs_iters must be >= 0, got {self.ihs_iters}")
+        object.__setattr__(self, "m", int(self.m))
+        object.__setattr__(self, "seed", int(self.seed))
+        object.__setattr__(self, "ihs_iters", int(self.ihs_iters))
+
+    def descriptor(self) -> str:
+        """Cache-key string; any field change must change this."""
+        return f"{self.method}/m{self.m}/seed{self.seed}/ihs{self.ihs_iters}"
+
+    def key_for(self, f_idx) -> jax.Array:
+        """Per-fold PRNG key (works with traced ``f_idx`` under vmap)."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), f_idx)
+
+    def to_json(self) -> dict:
+        return dict(
+            method=self.method, m=self.m, seed=self.seed, ihs_iters=self.ihs_iters
+        )
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "SketchPlan":
+        return cls(
+            method=str(rec["method"]),
+            m=int(rec["m"]),
+            seed=int(rec.get("seed", 0)),
+            ihs_iters=int(rec.get("ihs_iters", 0)),
+        )
+
+
+def as_plan(obj: Union["SketchPlan", dict, None]) -> Optional[SketchPlan]:
+    """Coerce user input (``SketchPlan`` | dict | None) to a plan."""
+    if obj is None or isinstance(obj, SketchPlan):
+        return obj
+    if isinstance(obj, dict):
+        return SketchPlan(**obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a SketchPlan")
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Orthonormal fast Walsh–Hadamard transform along axis 0.
+
+    ``x`` must have a power-of-two leading dimension.  Self-inverse:
+    ``fwht(fwht(x)) == x`` up to rounding.
+    """
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"fwht requires a power-of-two length, got {n}")
+    tail = x.shape[1:]
+    h = 1
+    while h < n:
+        x = x.reshape((n // (2 * h), 2, h) + tail)
+        a, b = x[:, 0], x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    x = x.reshape((n,) + tail)
+    return x / jnp.sqrt(jnp.asarray(n, x.dtype))
+
+
+def _gaussian_sketch(x: jax.Array, m: int, key: jax.Array) -> jax.Array:
+    n = x.shape[0]
+    g = jax.random.normal(key, (m, n), dtype=x.dtype)
+    return (g @ x) / jnp.sqrt(jnp.asarray(m, x.dtype))
+
+
+def _srht_sketch(x: jax.Array, m: int, key: jax.Array) -> jax.Array:
+    n = x.shape[0]
+    n2 = next_pow2(n)
+    m = min(m, n2)
+    k_sign, k_rows = jax.random.split(key)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=x.dtype)
+    xp = jnp.zeros((n2,) + x.shape[1:], x.dtype).at[:n].set(signs[:, None] * x)
+    hx = fwht(xp)
+    rows = jax.random.choice(k_rows, n2, (m,), replace=False)
+    # Orthonormal H: E[(SX)^T SX] = X^T X needs the n2/m subsampling scale.
+    return hx[rows] * jnp.sqrt(jnp.asarray(n2 / m, x.dtype))
+
+
+def _countsketch(x: jax.Array, m: int, key: jax.Array) -> jax.Array:
+    n = x.shape[0]
+    k_bucket, k_sign = jax.random.split(key)
+    buckets = jax.random.randint(k_bucket, (n,), 0, m)
+    signs = jax.random.rademacher(k_sign, (n,), dtype=x.dtype)
+    return jax.ops.segment_sum(signs[:, None] * x, buckets, num_segments=m)
+
+
+def sketch_rows(plan: SketchPlan, x: jax.Array, key: jax.Array) -> jax.Array:
+    """Apply ``S @ x`` for the plan's sketch operator; returns ``(m', h)``."""
+    if plan.method == "gaussian":
+        return _gaussian_sketch(x, plan.m, key)
+    if plan.method == "srht":
+        return _srht_sketch(x, plan.m, key)
+    return _countsketch(x, plan.m, key)
+
+
+def sketched_gram(
+    plan: SketchPlan,
+    x: jax.Array,
+    f_idx,
+    *,
+    accum_dtype: Any = None,
+) -> jax.Array:
+    """Sketched fold Hessian ``(S X)^T (S X)`` at the accumulation dtype."""
+    sx = sketch_rows(plan, x, plan.key_for(f_idx))
+    if accum_dtype is not None:
+        sx = sx.astype(accum_dtype)
+    h = sx.T @ sx
+    return 0.5 * (h + h.T)

@@ -2,5 +2,6 @@ from .synthetic import (  # noqa: F401
     make_classification,
     random_polynomial_features,
     make_regression_dataset,
+    make_low_rank_dataset,
     token_stream,
 )

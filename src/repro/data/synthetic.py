@@ -21,6 +21,7 @@ __all__ = [
     "make_classification",
     "random_polynomial_features",
     "make_regression_dataset",
+    "make_low_rank_dataset",
     "token_stream",
 ]
 
@@ -93,6 +94,41 @@ def make_regression_dataset(
     theta_true = signal_scale * jax.random.normal(k_t, (h,), dtype) / np.sqrt(h)
     y = feats @ theta_true + noise * jax.random.normal(k_n, (n,), dtype)
     return feats.astype(dtype), y.astype(dtype)
+
+
+def make_low_rank_dataset(
+    key: jax.Array,
+    n: int,
+    h: int,
+    rank: int,
+    *,
+    noise: float = 1.0,
+    tail_scale: float = 1e-3,
+    signal_scale: float = 3.0,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Planted (numerically) rank-r design in the n ≪ h regime the
+    low-rank ACV strategy targets.
+
+    ``X = A @ B + tail_scale · E`` with A (n, r), B (r, h): the top r
+    singular values carry the signal, the tail sits ``tail_scale`` below
+    them (exactly zero tails make SVD sign/order ties platform-dependent;
+    a small tail keeps the factorization deterministic while leaving the
+    rank-r truncation error negligible).  Labels come from a planted
+    model in the row space plus noise, so the hold-out curve keeps an
+    interior λ optimum.
+    """
+    if not 0 < rank <= min(n, h):
+        raise ValueError(f"rank must be in (0, min(n={n}, h={h})], got {rank}")
+    k_a, k_b, k_e, k_t, k_n = jax.random.split(key, 5)
+    a = jax.random.normal(k_a, (n, rank), dtype)
+    b = jax.random.normal(k_b, (rank, h), dtype) / np.sqrt(rank)
+    e = jax.random.normal(k_e, (n, h), dtype)
+    x = a @ b + tail_scale * e
+    theta_true = signal_scale * (b.T @ jax.random.normal(k_t, (rank,), dtype)
+                                 ) / np.sqrt(h)
+    y = x @ theta_true + noise * jax.random.normal(k_n, (n,), dtype)
+    return x.astype(dtype), y.astype(dtype)
 
 
 def token_stream(

@@ -197,7 +197,7 @@ class CVSweepServer:
                 str(f.fold_hess.dtype),
                 str(np.asarray(req.lams).dtype),
                 tuple(np.asarray(meta["anchors"]).tolist()),
-                prec)
+                prec, meta.get("sketch", "exact"))
 
     def submit(self, req: SweepRequest) -> int:
         """Enqueue a request; returns its assigned request id.  Raises

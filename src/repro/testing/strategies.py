@@ -40,9 +40,12 @@ except ImportError:  # hermetic container: install the fallback shim
     from hypothesis import strategies as st
 
 __all__ = [
-    "spd_matrix", "regression_folds", "make_backend", "log_grid",
+    "spd_matrix", "unit_spd_matrix", "regression_folds",
+    "tall_skinny_folds", "low_rank_folds", "make_backend", "log_grid",
     "backend_names", "grid_sizes", "lam_chunks", "heights", "blocks",
-    "packed_shapes", "DEFAULT_GRID_RANGE", "PACKED_SHAPES",
+    "packed_shapes", "tall_skinny_design", "low_rank_design",
+    "sketch_plans", "DEFAULT_GRID_RANGE", "PACKED_SHAPES",
+    "TALL_SKINNY_DESIGNS", "LOW_RANK_DESIGNS", "SKETCH_PLAN_CONFIGS",
     "active_precision", "parity_tol", "argmin_slack",
 ]
 
@@ -56,6 +59,38 @@ PACKED_SHAPES = [(5, 8), (13, 8), (21, 8), (37, 8), (27, 16), (61, 16)]
 #: from :func:`grid_sizes` derive the same anchors and can hit the cache.
 DEFAULT_GRID_RANGE = (-3.0, 2.0)
 
+#: n ≫ h fold-problem geometries for the sketched-anchor suites.  Per-fold
+#: training rows n_tr = n·(k−1)/k bound the sketch size a CountSketch IHS
+#: loop needs to contract (m ≳ 4·n_tr empirically — below that the sketched
+#: preconditioner's iteration matrix can have spectral radius > 1).
+TALL_SKINNY_DESIGNS = [
+    dict(h=16, n=128, k=4, seed=0),
+    dict(h=24, n=160, k=4, seed=2),
+    dict(h=24, n=192, k=3, seed=5),
+    dict(h=32, n=256, k=4, seed=1),
+]
+
+#: n ≪ h geometries (with a planted numerical rank) for the low-rank ACV
+#: suites — the regime where one SVD of the (n, h) design beats g Cholesky
+#: factorizations of the (h, h) Hessian.
+LOW_RANK_DESIGNS = [
+    dict(h=64, n=24, k=4, rank=6, seed=0),
+    dict(h=96, n=32, k=4, rank=8, seed=3),
+    dict(h=80, n=30, k=3, rank=10, seed=7),
+]
+
+#: SketchPlan configurations spanning every method, adequate sketch sizes
+#: for the TALL_SKINNY_DESIGNS row counts (CountSketch needs the larger m),
+#: and both zero and nonzero IHS refinement.
+SKETCH_PLAN_CONFIGS = [
+    dict(method="gaussian", m=256, seed=0, ihs_iters=2),
+    dict(method="gaussian", m=384, seed=3, ihs_iters=1),
+    dict(method="srht", m=256, seed=1, ihs_iters=2),
+    dict(method="srht", m=384, seed=4, ihs_iters=0),
+    dict(method="countsketch", m=512, seed=2, ihs_iters=2),
+    dict(method="countsketch", m=1024, seed=5, ihs_iters=3),
+]
+
 
 # ---------------------------------------------------------------- builders
 
@@ -66,19 +101,59 @@ def spd_matrix(h: int, seed: int = 0, dtype=jnp.float64) -> jax.Array:
     return x.T @ x + h * jnp.eye(h, dtype=dtype)
 
 
+def unit_spd_matrix(d: int, seed: int = 0) -> jax.Array:
+    """Unit-scale (d, d) SPD test matrix: XᵀX/rows + I — eigenvalues O(1),
+    the conditioning regime of the exact-Fréchet bound suites (which need
+    ‖A‖ ≈ 1 so the Thm 4.4/4.7 interval arithmetic stays in range).
+    NumPy RandomState draw, bit-identical to the historical in-test
+    generator the bound suites used."""
+    import numpy as np
+
+    x = np.random.RandomState(seed).randn(3 * d, d)
+    return jnp.asarray(x.T @ x / 3.0 + np.eye(d))
+
+
 def regression_folds(h: int = 32, n: int = 256, k: int = 4, seed: int = 1,
-                     dtype=jnp.float64, jitter: float = 0.0):
+                     dtype=jnp.float64, jitter: float = 0.0,
+                     noise: float = 1.0):
     """k-fold :class:`~repro.core.folds.FoldData` over a synthetic ridge
     problem — the shared fold-problem builder (``jitter`` perturbs the
-    design, for invalidation tests that need a *different* Hessian)."""
+    design, for invalidation tests that need a *different* Hessian;
+    ``noise`` scales the label noise — the sketched-anchor suites raise it
+    so the hold-out curve sits in the noise-dominated regime where
+    approximate anchors select equivalently)."""
     from repro.core.folds import make_folds
     from repro.data import make_regression_dataset
 
     x, y = make_regression_dataset(jax.random.PRNGKey(seed), n, h,
-                                   dtype=jnp.float64)
+                                   noise=noise, dtype=jnp.float64)
     if jitter:
         x = x + jitter * jax.random.normal(jax.random.PRNGKey(99), x.shape,
                                            jnp.float64)
+    return make_folds(x.astype(dtype), y.astype(dtype), k)
+
+
+def tall_skinny_folds(h: int = 24, n: int = 160, k: int = 4, seed: int = 2,
+                      dtype=jnp.float64, noise: float = 8.0):
+    """n ≫ h fold problem — the sketched-anchor regime (sketching the
+    (n_tr, h) design rows pays off only when n_tr dominates h).  Default
+    noise puts the hold-out curve in the noise-dominated regime."""
+    if n <= 2 * h:
+        raise ValueError(f"tall-skinny wants n >> h, got n={n}, h={h}")
+    return regression_folds(h=h, n=n, k=k, seed=seed, dtype=dtype,
+                            noise=noise)
+
+
+def low_rank_folds(h: int = 96, n: int = 32, k: int = 4, rank: int = 8,
+                   seed: int = 3, dtype=jnp.float64):
+    """n ≪ h fold problem over a planted (numerically) rank-r design —
+    the low-rank ACV regime (one SVD of the (n_tr, h) design replaces g
+    Cholesky factorizations of the (h, h) Hessian)."""
+    from repro.core.folds import make_folds
+    from repro.data import make_low_rank_dataset
+
+    x, y = make_low_rank_dataset(jax.random.PRNGKey(seed), n, h, rank,
+                                 dtype=jnp.float64)
     return make_folds(x.astype(dtype), y.astype(dtype), k)
 
 
@@ -193,3 +268,34 @@ def packed_shapes():
     """(h, block) pairs where h is NOT a tile multiple, incl. h < block —
     the escape-hatch oracle cases."""
     return st.sampled_from(PACKED_SHAPES)
+
+
+def tall_skinny_design():
+    """Geometry dicts (h, n, k, seed) for the n ≫ h sketched-anchor
+    regime — feed to :func:`tall_skinny_folds` via ``**cfg``."""
+    return st.sampled_from(TALL_SKINNY_DESIGNS)
+
+
+def low_rank_design():
+    """Geometry dicts (h, n, k, rank, seed) for the n ≪ h low-rank ACV
+    regime — feed to :func:`low_rank_folds` via ``**cfg``."""
+    return st.sampled_from(LOW_RANK_DESIGNS)
+
+
+def sketch_plans(methods=None):
+    """:class:`~repro.core.sketch.SketchPlan` draws covering every sketch
+    method at sizes adequate for the :data:`TALL_SKINNY_DESIGNS` row
+    counts (built from ``sampled_from`` + ``.map`` only, so the in-repo
+    hypothesis fallback enumerates them too).  ``methods`` restricts to a
+    subset of :data:`~repro.core.sketch.SKETCH_METHODS`."""
+    cfgs = (SKETCH_PLAN_CONFIGS if methods is None else
+            [c for c in SKETCH_PLAN_CONFIGS if c["method"] in methods])
+    if not cfgs:
+        raise ValueError(f"no sketch-plan configs for methods={methods!r}")
+
+    def _build(cfg):
+        from repro.core.sketch import SketchPlan
+
+        return SketchPlan(**cfg)
+
+    return st.sampled_from(cfgs).map(_build)

@@ -6,11 +6,11 @@ import numpy as np
 import pytest
 
 from repro.core import bound, picholesky
+from repro.testing import strategies as props
 
-
-def _spd(d, seed):
-    x = np.random.RandomState(seed).randn(3 * d, d)
-    return jnp.asarray(x.T @ x / 3.0 + np.eye(d))
+# shared generator (repro.testing.strategies): unit-scale SPD matrices,
+# bit-identical to the RandomState construction this suite used locally
+_spd = props.unit_spd_matrix
 
 
 @pytest.mark.parametrize("seed", [0, 1])

@@ -6,6 +6,11 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import packing, picholesky
+from repro.testing import strategies as props
+
+# shared generator (repro.testing.strategies): well-conditioned SPD test
+# Hessians — one definition across the property suites
+_spd = props.spd_matrix
 
 
 # ---------------------------------------------------------------- packing
@@ -42,11 +47,6 @@ def test_packed_mask_counts_true_entries(h, block):
 
 
 # ------------------------------------------------------------ vandermonde
-
-
-def _spd(h, seed):
-    x = np.random.RandomState(seed).randn(2 * h, h)
-    return jnp.asarray(x.T @ x + h * np.eye(h))
 
 
 @given(degree=st.integers(1, 3), g_extra=st.integers(1, 3),

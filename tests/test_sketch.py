@@ -1,0 +1,449 @@
+"""Sketched anchor factorizations (tentpole property suite).
+
+The accuracy/speed-frontier contracts live here:
+
+* **sketch substrate** — every sketch method produces a seeded,
+  reproducible, SPD sketched Gram with the right shape; SRHT with a
+  full Hadamard (m ≥ next_pow2(n)) is *exact*; Gaussian concentration
+  tightens with m.
+* **IHS refinement** — with an adequately sized sketch the iterative
+  Hessian-sketch loop contracts the solve error geometrically per
+  iteration (Pilanci–Wainwright), so the engine's sketched hold-out
+  curve converges to the dense curve as m grows.
+* **no silent cross-serving** — the sketch descriptor is a first-class
+  CacheKey field: perturbing method, m, seed, or IHS depth MISSES and
+  repopulates, and a sketched factor can never serve an exact request
+  (or vice versa).
+* **downstream unchanged** — warm replay is bitwise, persistence
+  round-trips, interpolant selection over sketched anchors parks
+  anchors-only entries and factorizes nothing on a warm cache, both
+  backends agree, and the async sweep equals the fused run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import bound, engine, factor_cache, picholesky, solvers
+from repro.core import sketch as sk
+from repro.core.backends import CountingBackend, ReferenceBackend
+from repro.testing import strategies as props
+
+LAMS = props.log_grid(17)
+
+
+@pytest.fixture(scope="module")
+def folds():
+    return props.tall_skinny_folds()       # h=24, n=160, k=4 (n_tr=120)
+
+
+def _strat(**kw):
+    kw.setdefault("g", 4)
+    kw.setdefault("block", 8)
+    kw.setdefault("sketch", _plan())
+    return engine.PiCholeskySketched(**kw)
+
+
+def _plan(**kw):
+    """Default test plan: SRHT at m = next_pow2(n_tr) — a full Hadamard,
+    so the sketched Gram is exact and cache/replay asserts stay bitwise."""
+    cfg = dict(method="srht", m=128, seed=0, ihs_iters=1)
+    cfg.update(kw)
+    return sk.SketchPlan(**cfg)
+
+
+def _train_design(folds, f=0):
+    """Training design/labels of fold f (rows of every other fold)."""
+    x = np.asarray(folds.x_folds)
+    y = np.asarray(folds.y_folds)
+    keep = [i for i in range(x.shape[0]) if i != f]
+    return (jnp.asarray(np.concatenate([x[i] for i in keep])),
+            jnp.asarray(np.concatenate([y[i] for i in keep])))
+
+
+# ------------------------------------------------------- sketch substrate
+
+
+def test_fwht_orthonormal_involution():
+    """The normalized Walsh–Hadamard transform is orthonormal and its own
+    inverse; non-power-of-two lengths fail fast."""
+    x = jnp.asarray(np.random.RandomState(0).randn(64, 5))
+    hx = sk.fwht(x)
+    np.testing.assert_allclose(np.asarray(sk.fwht(hx)), np.asarray(x),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(float(jnp.linalg.norm(hx)),
+                               float(jnp.linalg.norm(x)), rtol=1e-12)
+    with pytest.raises(ValueError, match="power-of-two"):
+        sk.fwht(jnp.ones((48,)))
+    assert sk.next_pow2(120) == 128 and sk.next_pow2(128) == 128
+
+
+@pytest.mark.parametrize("method", sk.SKETCH_METHODS)
+def test_sketch_shapes_and_gram_spd(folds, method):
+    """S·X has m rows; the sketched Gram is symmetric PSD of shape (h, h)."""
+    x, _ = _train_design(folds)
+    plan = sk.SketchPlan(method=method, m=64, seed=3)
+    sx = sk.sketch_rows(plan, x, plan.key_for(0))
+    assert sx.shape == (min(64, sk.next_pow2(x.shape[0])
+                            if method == "srht" else 64), x.shape[1])
+    h_sk = sk.sketched_gram(plan, x, 0)
+    assert h_sk.shape == (x.shape[1], x.shape[1])
+    np.testing.assert_array_equal(np.asarray(h_sk), np.asarray(h_sk).T)
+    evals = np.linalg.eigvalsh(np.asarray(h_sk))
+    assert evals.min() >= -1e-8 * max(1.0, evals.max())
+
+
+@pytest.mark.parametrize("method", sk.SKETCH_METHODS)
+def test_sketch_reproducible_and_seed_sensitive(folds, method):
+    """Same plan + fold index is bitwise reproducible; a different seed or
+    fold index draws a different sketch."""
+    x, _ = _train_design(folds)
+    plan = sk.SketchPlan(method=method, m=64, seed=3)
+    a = sk.sketched_gram(plan, x, 0)
+    b = sk.sketched_gram(plan, x, 0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    other_seed = sk.sketched_gram(sk.SketchPlan(method=method, m=64, seed=4),
+                                  x, 0)
+    other_fold = sk.sketched_gram(plan, x, 1)
+    assert not np.array_equal(np.asarray(a), np.asarray(other_seed))
+    assert not np.array_equal(np.asarray(a), np.asarray(other_fold))
+
+
+def test_srht_full_hadamard_is_exact(folds):
+    """m ≥ next_pow2(n) keeps every Hadamard row: SᵀS = I exactly, so the
+    sketched Gram equals XᵀX to rounding — the degenerate end of the
+    accuracy frontier."""
+    x, _ = _train_design(folds)                    # (120, 24) → n2 = 128
+    h_sk = sk.sketched_gram(_plan(m=128), x, 0)
+    np.testing.assert_allclose(np.asarray(h_sk), np.asarray(x.T @ x),
+                               rtol=1e-10, atol=1e-8)
+
+
+def test_gaussian_gram_concentrates_with_m(folds):
+    """Gaussian sketch error ≈ sqrt(h/m): quadrupling m must cut the
+    relative Gram error (averaged over seeds to dodge draw luck)."""
+    x, _ = _train_design(folds)
+    exact = np.asarray(x.T @ x)
+    scale = np.linalg.norm(exact)
+
+    def rel(m):
+        errs = [np.linalg.norm(np.asarray(
+            sk.sketched_gram(sk.SketchPlan(method="gaussian", m=m, seed=s),
+                             x, 0)) - exact) / scale for s in range(3)]
+        return float(np.mean(errs))
+
+    lo, hi = rel(64), rel(1024)
+    assert hi < lo / 2, (lo, hi)
+    assert hi < 0.25
+
+
+@given(plan=props.sketch_plans(), cfg=props.tall_skinny_design())
+@settings(max_examples=8, deadline=None)
+def test_sketched_gram_psd_property(plan, cfg):
+    """Property: every plan drawn from the shared strategy produces a
+    symmetric PSD Gram for every tall-skinny geometry."""
+    f = props.tall_skinny_folds(**cfg)
+    x, _ = _train_design(f)
+    h_sk = np.asarray(sk.sketched_gram(plan, x, 0))
+    np.testing.assert_allclose(h_sk, h_sk.T, rtol=0, atol=0)
+    evals = np.linalg.eigvalsh(h_sk)
+    assert evals.min() >= -1e-6 * max(1.0, evals.max())
+
+
+def test_plan_validation_descriptor_json():
+    p = _plan()
+    assert p.descriptor() == "srht/m128/seed0/ihs1"
+    assert sk.SketchPlan.from_json(p.to_json()) == p
+    assert sk.as_plan(None) is None
+    assert sk.as_plan(p) is p
+    assert sk.as_plan(dict(method="gaussian", m=64)) == sk.SketchPlan(
+        method="gaussian", m=64)
+    with pytest.raises(ValueError, match="method"):
+        sk.SketchPlan(method="subgaussian")
+    with pytest.raises(ValueError, match="m"):
+        sk.SketchPlan(m=0)
+    with pytest.raises(ValueError, match="ihs_iters"):
+        sk.SketchPlan(ihs_iters=-1)
+    with pytest.raises(TypeError, match="SketchPlan"):
+        sk.as_plan("countsketch/m256")
+
+
+# ------------------------------------------------------- IHS refinement
+
+
+def test_ihs_error_contracts_geometrically(folds):
+    """IHS contract (arXiv:1411.0347): preconditioning with the
+    interpolated *sketched* factor while computing exact residuals
+    contracts the solve error geometrically in the iteration count, down
+    to the interpolation floor."""
+    x, y = _train_design(folds)
+    h_tr, g_tr = x.T @ x, x.T @ y
+    plan = sk.SketchPlan(method="gaussian", m=384, seed=0)
+    h_sk = sk.sketched_gram(plan, x, 0)
+    anchors = picholesky.choose_sample_lambdas(1e-3, 1e2, 4)
+    model = picholesky.fit(h_sk, anchors, 2, block=8)
+    lams = props.log_grid(5)
+    exact = solvers.solve_cholesky_sweep(h_tr, g_tr, lams)
+    scale = float(jnp.linalg.norm(exact))
+    theta0 = model.solve(lams, g_tr)
+
+    errs = []
+    for iters in range(4):
+        th = picholesky.refine_solutions(model, h_tr, g_tr, lams, theta0,
+                                         iters=iters)
+        errs.append(float(jnp.linalg.norm(th - exact)) / scale)
+    for prev, cur in zip(errs, errs[1:]):
+        assert cur < 0.9 * prev + 1e-12, errs
+    assert errs[3] < 0.2 * errs[0], errs
+
+
+def test_sketched_engine_tightens_toward_dense_with_m(folds):
+    """Engine-level frontier: as m grows the sketched hold-out curve
+    approaches the dense curve, and the sketched pick's *regret on the
+    dense curve* is negligible — λ-selection agreement, robust to the
+    noise-dominated plateau."""
+    dense = engine.CVEngine("picholesky").run(folds, LAMS)
+    ed = np.asarray(dense.errors)
+    native = props.active_precision().is_native
+    relax = 1.0 if native else 10.0
+
+    diffs = {}
+    for m in (512, 2048):
+        r = engine.CVEngine("picholesky", sketch=dict(
+            method="countsketch", m=m, seed=0, ihs_iters=2)).run(folds, LAMS)
+        e = np.asarray(r.errors)
+        diffs[m] = float(np.max(np.abs(e - ed)))
+        regret = ed[int(np.argmin(e))] - ed.min()
+        assert regret <= 0.01 * relax, (m, regret)
+    assert diffs[2048] < diffs[512] + (0.0 if native else 0.05), diffs
+    assert diffs[2048] < 0.01 * relax, diffs
+
+
+def test_sketched_thm44_bound_dominates(folds):
+    """Thm 4.4/4.7 dominance survives sketched anchors: the analytic
+    bound evaluated on the *sketched* Gram dominates the observed
+    interpolation error of the sketched factors (the bound machinery
+    sees only an SPD matrix — which matrix it is must not matter)."""
+    d = 8
+    x_np = np.random.RandomState(1).randn(3 * d * 4, d)
+    x = jnp.asarray(x_np / np.sqrt(x_np.shape[0]))   # unit-scale XᵀX
+    for method, m in (("gaussian", 256), ("countsketch", 512)):
+        plan = sk.SketchPlan(method=method, m=m, seed=0)
+        a = sk.sketched_gram(plan, x, 0) + jnp.eye(d, dtype=x.dtype)
+        lam_c, w, gamma = 0.6, 0.15, 0.15
+        sample = jnp.linspace(lam_c - w, lam_c + w, 5)
+        model = picholesky.fit(a, sample, 2, block=4)
+        rhs = float(bound.picholesky_bound(a, sample, lam_c, gamma))
+        big_d = d * (d + 1) / 2.0
+        worst = 0.0
+        for lam in np.linspace(lam_c - gamma, lam_c + gamma, 9):
+            l_i = model.eval_factor(jnp.asarray(lam))
+            l_e = jnp.linalg.cholesky(a + lam * jnp.eye(d, dtype=a.dtype))
+            worst = max(worst,
+                        float(jnp.linalg.norm(l_i - l_e)) / np.sqrt(big_d))
+        assert worst <= rhs * 1.01, (method, worst, rhs)
+
+
+# ----------------------------------------------------- cache + warm replay
+
+
+def test_sketched_warm_replay_zero_factorizations(folds):
+    """Cold sketched run populates; a fresh engine over the warm cache
+    traces ZERO cholesky calls and reproduces the cold curve bitwise —
+    the tentpole's 'downstream unchanged' floor."""
+    cache = factor_cache.FactorCache()
+    cold_bk = CountingBackend(props.make_backend("reference"))
+    r_cold = engine.CVEngine(_strat(), backend=cold_bk, cache=cache
+                             ).run(folds, LAMS)
+    assert cold_bk.n_cholesky > 0
+    assert r_cold.extras["engine"]["cache"]["status"] == "miss"
+
+    warm_bk = CountingBackend(props.make_backend("reference"))
+    r_warm = engine.CVEngine(_strat(), backend=warm_bk, cache=cache
+                             ).run(folds, LAMS)
+    assert warm_bk.n_cholesky == 0
+    assert r_warm.extras["engine"]["cache"]["status"] == "hit"
+    assert r_warm.n_exact_chol == 0
+    np.testing.assert_array_equal(r_warm.errors, r_cold.errors)
+
+
+def test_sketched_cache_persistence_bitwise(folds, tmp_path):
+    """save → load → warm sketched sweep is bitwise identical to the
+    in-memory warm sweep, and the persisted key carries the descriptor."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    cache.save(str(tmp_path))
+    loaded = factor_cache.FactorCache.load(str(tmp_path))
+    assert sorted(loaded.entries) == sorted(cache.entries)
+    (back,) = loaded.entries.values()
+    assert back.key.sketch == _plan().descriptor()
+
+    r_mem = engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    r_disk = engine.CVEngine(_strat(), cache=loaded).run(folds, LAMS)
+    assert r_disk.extras["engine"]["cache"]["status"] == "hit"
+    np.testing.assert_array_equal(r_mem.errors, r_disk.errors)
+
+
+def test_sketch_descriptor_in_cache_key(folds):
+    """The descriptor is a first-class CacheKey field: it survives JSON,
+    feeds all three digests (exact, covering, anchor-reuse), and exact
+    vs sketched keys can never alias."""
+    h_tr = folds.hess[None] - folds.fold_hess
+    meta = _strat().cache_meta(LAMS)
+    assert meta["sketch"] == _plan().descriptor()
+    key = factor_cache.make_key(h_tr, meta["anchors"], block=8,
+                                backend="reference", params=meta["params"],
+                                sketch=meta["sketch"])
+    assert factor_cache.CacheKey.from_json(key.to_json()).sketch == key.sketch
+    exact_key = factor_cache.make_key(h_tr, meta["anchors"], block=8,
+                                      backend="reference",
+                                      params=meta["params"])
+    assert exact_key.sketch == "exact"
+    assert key.digest() != exact_key.digest()
+    assert key.base_digest() != exact_key.base_digest()
+    assert key.anchor_digest() != exact_key.anchor_digest()
+
+
+_SKETCH_MUTATIONS = {
+    "changed_method": dict(strat=lambda: _strat(
+        sketch=dict(method="countsketch", m=128, seed=0, ihs_iters=1))),
+    "changed_m": dict(strat=lambda: _strat(sketch=_plan(m=64))),
+    "changed_seed": dict(strat=lambda: _strat(sketch=_plan(seed=7))),
+    "changed_ihs_iters": dict(strat=lambda: _strat(sketch=_plan(ihs_iters=3))),
+    "sketched_vs_exact": dict(strat=lambda: engine.PiCholeskyStrategy(
+        g=4, block=8)),
+}
+
+
+@pytest.mark.parametrize("mutation", sorted(_SKETCH_MUTATIONS))
+def test_sketch_fingerprint_mismatch_misses_and_repopulates(folds, mutation):
+    """Negative contract (mirrors the factor-cache matrix): every sketch
+    descriptor ingredient invalidates — the mutated run MUST miss, must
+    equal its fresh cold run, and must repopulate to a hit."""
+    cache = factor_cache.FactorCache()
+    engine.CVEngine(_strat(), cache=cache).run(folds, LAMS)
+    assert len(cache) == 1
+
+    m_strat = _SKETCH_MUTATIONS[mutation]["strat"]
+    r = engine.CVEngine(m_strat(), cache=cache).run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] == "miss", mutation
+    assert len(cache) == 2
+
+    fresh = engine.CVEngine(m_strat()).run(folds, LAMS)
+    np.testing.assert_allclose(r.errors, fresh.errors,
+                               **props.parity_tol(1e-7, 1e-9))
+    r2 = engine.CVEngine(m_strat(), cache=cache).run(folds, LAMS)
+    assert r2.extras["engine"]["cache"]["status"] == "hit", mutation
+    np.testing.assert_array_equal(r2.errors, r.errors)
+
+
+def test_exact_request_never_served_by_sketched_entry(folds):
+    """The other direction of the aliasing contract: populate sketched
+    first; an exact request misses and computes its own (different)
+    answer."""
+    cache = factor_cache.FactorCache()
+    r_sk = engine.CVEngine(_strat(sketch=_plan(m=64)), cache=cache
+                           ).run(folds, LAMS)
+    r_ex = engine.CVEngine(engine.PiCholeskyStrategy(g=4, block=8),
+                           cache=cache).run(folds, LAMS)
+    assert r_ex.extras["engine"]["cache"]["status"] == "miss"
+    fresh = engine.CVEngine(engine.PiCholeskyStrategy(g=4, block=8)
+                            ).run(folds, LAMS)
+    np.testing.assert_allclose(r_ex.errors, fresh.errors,
+                               **props.parity_tol(1e-9, 1e-12))
+    assert not np.array_equal(np.asarray(r_ex.errors), np.asarray(r_sk.errors))
+
+
+# ------------------------------------------- engine wiring + selection
+
+
+def test_engine_sketch_kwarg_wiring(folds):
+    """CVEngine(sketch=...) promotes the exact strategy, normalizes dicts,
+    rejects conflicts, a plan-less sketched strategy, and non-anchored
+    strategies."""
+    eng = engine.CVEngine("picholesky", sketch=dict(method="srht", m=128))
+    assert isinstance(eng.strategy, engine.PiCholeskySketched)
+    assert eng.strategy.sketch == sk.SketchPlan(method="srht", m=128)
+    eng2 = engine.CVEngine(engine.PiCholeskySketched(g=4, block=8),
+                           sketch=_plan())
+    assert eng2.strategy.sketch == _plan()
+    with pytest.raises(ValueError, match="sketch"):
+        engine.CVEngine(_strat(sketch=_plan(seed=1)), sketch=_plan(seed=2))
+    with pytest.raises(ValueError, match="sketch"):
+        engine.CVEngine(engine.PiCholeskySketched(g=4, block=8))
+    with pytest.raises(ValueError, match="sketch"):
+        engine.CVEngine("exact", sketch=_plan())
+    assert engine.make_strategy("picholesky_sketched",
+                                sketch=_plan()).name == "picholesky_sketched"
+
+
+def test_select_interpolant_over_sketched_anchors(folds):
+    """Satellite: interpolant selection over *sketched* anchor targets —
+    a cold selection parks an anchors-only entry whose key carries the
+    sketch descriptor; re-selection serves from it with ZERO
+    factorizations; the winning engine's sweep refits from the parked
+    anchors."""
+    cache = factor_cache.FactorCache()
+    bk = CountingBackend(ReferenceBackend())
+    eng = engine.CVEngine(_strat(), backend=bk, cache=cache,
+                          cache_anchors=True)
+    sel = eng.select_interpolant(folds, LAMS)
+    assert sel["anchor_status"] == "cold+cached"
+    assert bk.n_cholesky > 0
+
+    (entry,) = cache.entries.values()
+    assert entry.state is None and entry.anchors is not None
+    assert entry.key.sketch == _plan().descriptor()
+
+    bk.reset()
+    sel2 = eng.select_interpolant(folds, LAMS)
+    assert sel2["anchor_status"] == "anchors"
+    assert bk.n_cholesky == 0
+    assert (sel2["degree"], sel2["basis"]) == (sel["degree"], sel["basis"])
+
+    win = eng.with_interpolant(sel["degree"], sel["basis"])
+    r = win.run(folds, LAMS)
+    assert r.extras["engine"]["cache"]["status"] in ("refit", "hit")
+    assert bk.n_cholesky == 0
+
+
+def test_advise_anchor_on_sketched_strategy(folds):
+    """The bound-guided anchor advisor accepts the sketched strategy
+    (it is anchored) and round-trips the probe geometry."""
+    eng = engine.CVEngine(_strat())
+    out = eng.advise_anchor(folds, LAMS, probe_dim=8, n_grid=3)
+    assert out["probe_dim"] == 8
+    assert len(out["anchors"]) == 4
+    lo, hi = out["intervals"][out["worst"]]
+    assert lo < out["proposal"] < hi
+
+
+# --------------------------------------------------- parity + async
+
+
+@pytest.mark.tier2
+@given(backend=props.backend_names(), plan=props.sketch_plans())
+@settings(max_examples=6, deadline=None)
+def test_backend_parity_sketched(backend, plan):
+    """Property: for every plan in the shared strategy, the sketched
+    sweep on the pallas backend selects equivalently to reference (the
+    sketch is backend-independent; only factorize/substitute kernels
+    differ)."""
+    folds = props.tall_skinny_folds(h=16, n=128, k=4, seed=0)
+    ref = engine.CVEngine(_strat(sketch=plan)).run(folds, LAMS)
+    alt = engine.CVEngine(_strat(sketch=plan),
+                          backend=props.make_backend(backend)
+                          ).run(folds, LAMS)
+    np.testing.assert_allclose(alt.errors, ref.errors,
+                               **props.parity_tol(1e-6, 1e-8))
+    props.assert_selection_close(alt.errors, ref.errors)
+
+
+def test_run_async_matches_run_sketched(folds):
+    """The chunked async sweep consumes sketched anchors unchanged."""
+    r_fused = engine.CVEngine(_strat()).run(folds, LAMS)
+    r_async = engine.CVEngine(_strat(), lam_chunk=7).run_async(folds, LAMS)
+    np.testing.assert_allclose(r_async.errors, r_fused.errors,
+                               **props.parity_tol(1e-9, 1e-12))
+    props.assert_selection_close(r_async.errors, r_fused.errors)
